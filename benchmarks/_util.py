@@ -1,0 +1,35 @@
+"""Shared helpers for the benchmark harness."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
+    """Median wall-time per call in microseconds (jit-warmed)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def fmt(kv: dict) -> str:
+    return ";".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in kv.items())
+
+
+def print_rows(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,37 @@
+"""Paper Tab. 4: layer-wise probability schedule ablation
+(decreasing — the paper's default — vs constant vs increasing)."""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.mixing import MixingConfig
+
+from benchmarks._util import fmt
+from benchmarks.population_common import ExpConfig, run_experiment
+
+
+def run(quick: bool = True):
+    ecfg = ExpConfig(model="mlp", width=64, depth=3, hw=12, noise=1.6,
+                     steps=300 if quick else 800, lr=0.15)
+    rows = []
+    for schedule in ("decreasing", "constant", "increasing"):
+        mcfg = MixingConfig(kind="wash", base_p=0.05, mode="dense",
+                            schedule=schedule)
+        t0 = time.perf_counter()
+        m = run_experiment(mcfg, ecfg, record_every=150)
+        us = (time.perf_counter() - t0) * 1e6 / ecfg.steps
+        rows.append((
+            f"tab4_{schedule}",
+            us,
+            fmt({"ensemble": m["ensemble"], "averaged": m["averaged"],
+                 "greedy": m["greedy"], "best": m["best_member"],
+                 "worst": m["worst_member"], "comm": m["comm_scalars"]}),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

@@ -1,0 +1,33 @@
+"""Paper Table 3: the homogeneous setting — no augmentations; members
+differ only through data order.  Same pattern targets as Table 2."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks._util import fmt
+from benchmarks.population_common import METHODS, ExpConfig, run_experiment
+
+
+def run(quick: bool = True):
+    ecfg = ExpConfig(model="mlp", width=64, depth=3, hw=12, noise=1.6,
+                     steps=400 if quick else 1000, lr=0.15, heterogeneous=False)
+    rows = []
+    for name in ("baseline", "papa", "wash"):
+        t0 = time.perf_counter()
+        m = run_experiment(METHODS[name], ecfg, record_every=200)
+        us = (time.perf_counter() - t0) * 1e6 / ecfg.steps
+        rows.append((
+            f"table3_hom_{name}",
+            us,
+            fmt({"ensemble": m["ensemble"], "averaged": m["averaged"],
+                 "greedy": m["greedy"], "consensus": m["consensus"][-1],
+                 "comm": m["comm_scalars"]}),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

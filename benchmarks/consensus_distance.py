@@ -1,0 +1,39 @@
+"""Paper Fig. 2: average distance to consensus during training.
+
+Targets: WASH's distance stays BELOW the baseline's (averaging works) but
+ABOVE PAPA's / PAPA-all's (diversity preserved) — the paper's central
+diversity/averageability trade-off."""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks._util import fmt
+from benchmarks.population_common import METHODS, ExpConfig, run_experiment
+
+
+def run(quick: bool = True):
+    ecfg = ExpConfig(model="mlp", width=64, depth=3, hw=12, noise=1.6,
+                     steps=300 if quick else 800, lr=0.15)
+    rows = []
+    finals = {}
+    for name in ("baseline", "papa", "papa_all", "wash"):
+        t0 = time.perf_counter()
+        m = run_experiment(METHODS[name], ecfg, record_every=50)
+        us = (time.perf_counter() - t0) * 1e6 / ecfg.steps
+        finals[name] = m["consensus"][-1]
+        trace = ",".join(f"{c:.2f}" for c in m["consensus"])
+        rows.append((f"fig2_consensus_{name}", us,
+                     fmt({"final": m["consensus"][-1]}) + f";trace={trace}"))
+    ordered = (finals["papa_all"] <= finals["papa"] + 1e-6
+               and finals["papa"] <= finals["wash"]
+               and finals["wash"] <= finals["baseline"])
+    rows.append(("fig2_ordering_papaall<=papa<=wash<=baseline", 0.0,
+                 fmt({"holds": int(ordered)})))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

@@ -1,0 +1,79 @@
+"""Paper Fig. 6 (appendix): accuracy over weight-space interpolations.
+
+For Baseline populations, random convex combinations of members score at
+chance; for WASH populations, *every* interpolation stays at high accuracy
+(all members share one basin)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import averaging as avg
+from repro.data import eval_images, make_image_task
+from repro.models.cnn import apply_classifier
+
+from benchmarks._util import fmt
+from benchmarks.population_common import METHODS, ExpConfig, run_experiment
+
+
+def run(quick: bool = True):
+    # re-train two small populations and probe random interpolations
+    from repro.configs.base import TrainConfig
+    from repro.core.mixing import MixingConfig
+    from repro.data import member_policies, sample_images, apply_policy, soft_cross_entropy
+    from repro.models.cnn import ClassifierConfig, init_classifier
+    from repro.train import train_population
+
+    key = jax.random.key(11)
+    ecfg = ExpConfig(model="mlp", width=64, depth=3, hw=12, noise=1.6,
+                     steps=300 if quick else 800, lr=0.15, population=3)
+    task = make_image_task(jax.random.fold_in(key, 1), ecfg.num_classes,
+                           ecfg.hw, ecfg.noise)
+    ccfg = ClassifierConfig(kind="mlp", width=ecfg.width, depth=ecfg.depth,
+                            num_classes=ecfg.num_classes, image_hw=ecfg.hw)
+    pols = member_policies(jax.random.fold_in(key, 7), ecfg.population, True)
+
+    def data_fn(m, step, k):
+        imgs, labels = sample_images(task, k, ecfg.batch_size)
+        x, y = apply_policy(jax.random.fold_in(k, 1), imgs, labels,
+                            ecfg.num_classes, pols[m])
+        return {"x": x, "y": y}
+
+    def loss_fn(params, batch):
+        return soft_cross_entropy(apply_classifier(params, ccfg, batch["x"]),
+                                  batch["y"])
+
+    tcfg = TrainConfig(population=ecfg.population, optimizer="sgd", lr=ecfg.lr,
+                       total_steps=ecfg.steps, batch_size=ecfg.batch_size)
+    ex, ey = eval_images(task, jax.random.fold_in(key, 99), 512)
+    apply_fn = lambda p, x: apply_classifier(p, ccfg, x)
+
+    rows = []
+    for name in ("baseline", "wash"):
+        t0 = time.perf_counter()
+        res = train_population(key, lambda k: init_classifier(k, ccfg),
+                               loss_fn, data_fn, tcfg, METHODS[name],
+                               ccfg.num_blocks, record_every=150)
+        accs = []
+        for i in range(8 if quick else 25):
+            w = jax.random.dirichlet(jax.random.fold_in(key, 100 + i),
+                                     jnp.ones(ecfg.population))
+            m = avg.interpolate(res.population, w)
+            accs.append(float(avg.model_accuracy(apply_fn, m, ex, ey)))
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((
+            f"fig6_interp_{name}",
+            us,
+            fmt({"min_acc": min(accs), "mean_acc": sum(accs) / len(accs),
+                 "max_acc": max(accs), "chance": 1.0 / ecfg.num_classes}),
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

@@ -1,0 +1,62 @@
+"""Pallas kernel microbenchmarks (interpret mode on CPU: correctness-scale
+timings only; the derived column reports achieved GB/s / GFLOP/s against
+the jnp reference implementation on the same shapes)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+from benchmarks._util import Row, fmt, time_fn
+
+KEY = jax.random.key(0)
+
+
+def run(quick: bool = True):
+    rows = []
+
+    # wash_shuffle: one stacked (N, D) leaf
+    n, d = 5, 1 << 18
+    x = jax.random.normal(KEY, (n, d), jnp.float32)
+    perm = jnp.argsort(jax.random.uniform(jax.random.fold_in(KEY, 1), (n, d)), 0).astype(jnp.int32)
+    mask = jax.random.bernoulli(jax.random.fold_in(KEY, 2), 0.05, (d,))
+    us_k = time_fn(lambda: ops.wash_shuffle(x, perm, mask, block_d=4096), iters=3)
+    us_r = time_fn(jax.jit(lambda: ref.wash_shuffle_ref(x, perm, mask)), iters=3)
+    bytes_moved = (x.size * 4 * 2) + perm.size * 4 + mask.size
+    rows.append(("kernel_wash_shuffle", us_k,
+                 fmt({"ref_us": us_r, "bytes": bytes_moved,
+                      "interp_gbps": bytes_moved / us_k / 1e3})))
+
+    # flash attention: prefill-like block
+    B, S, H, KV, hd = 1, 512, 4, 2, 64
+    q = jax.random.normal(KEY, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(KEY, 3), (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(jax.random.fold_in(KEY, 4), (B, S, KV, hd), jnp.float32)
+    us_k = time_fn(lambda: ops.flash_attention(q, k, v, block_q=128, block_k=128), iters=3)
+    us_r = time_fn(jax.jit(lambda: ref.flash_attention_ref(q, k, v)), iters=3)
+    flops = 4 * B * H * S * S * hd / 2  # causal
+    rows.append(("kernel_flash_attention", us_k,
+                 fmt({"ref_us": us_r, "flops": flops,
+                      "interp_gflops": flops / us_k / 1e3})))
+
+    # rwkv6 scan
+    B, T, H, hd = 1, 256, 4, 64
+    r = jax.random.normal(KEY, (B, T, H, hd), jnp.float32)
+    kk = jax.random.normal(jax.random.fold_in(KEY, 5), (B, T, H, hd), jnp.float32)
+    vv = jax.random.normal(jax.random.fold_in(KEY, 6), (B, T, H, hd), jnp.float32)
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(KEY, 7), (B, T, H, hd)))
+    u = jax.random.normal(jax.random.fold_in(KEY, 8), (H, hd)) * 0.1
+    us_k = time_fn(lambda: ops.rwkv6_scan(r, kk, vv, w, u, chunk=32), iters=3)
+    us_r = time_fn(jax.jit(lambda: ref.rwkv6_scan_ref(r, kk, vv, w, u)), iters=3)
+    flops = 4 * B * T * H * hd * hd
+    rows.append(("kernel_rwkv6_scan", us_k,
+                 fmt({"ref_us": us_r, "flops": flops})))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

@@ -1,0 +1,102 @@
+"""Assemble the EXPERIMENTS.md roofline tables from the dry-run JSONs.
+
+    PYTHONPATH=src:. python -m benchmarks.report [--out-dir benchmarks/dryrun]
+
+Prints markdown: the full single-pod baseline table, the multi-pod proof
+table, and the WASH population runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+ARCH_ORDER = [
+    "minitron-8b", "llama3.2-3b", "deepseek-v2-lite-16b", "whisper-medium",
+    "qwen3-4b", "hymba-1.5b", "rwkv6-3b", "kimi-k2-1t-a32b", "internvl2-76b",
+    "qwen1.5-4b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir):
+    recs = {}
+    for p in glob.glob(os.path.join(out_dir, "*.json")):
+        r = json.load(open(p))
+        recs[os.path.basename(p)[:-5]] = r
+    return recs
+
+
+def sci(x):
+    return f"{x:.2e}" if isinstance(x, (int, float)) else "—"
+
+
+def baseline_table(recs, suffix="_sp"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            r = recs.get(f"{a}_{s}{suffix}")
+            if r is None:
+                continue
+            if r.get("status") == "skip":
+                lines.append(f"| {a} | {s} | — | — | — | skip | — | — | {r['note']} |")
+                continue
+            if r.get("status") != "ok":
+                lines.append(f"| {a} | {s} | — | — | — | ERROR | — | — | {r.get('error','')[:60]} |")
+                continue
+            u = r.get("useful_flops_ratio")
+            lines.append(
+                f"| {a} | {s} | {sci(r['compute_s'])} | {sci(r['memory_s'])} | "
+                f"{sci(r['collective_s'])} | {r['dominant'].replace('_s','')} | "
+                f"{sci(r['model_flops'])} | {u and round(u,3)} | {r.get('note','')} |"
+            )
+    return "\n".join(lines)
+
+
+def wash_table(recs):
+    lines = [
+        "| run | mesh | mixing | permute B/dev | all-reduce B/dev | "
+        "all-to-all B/dev | compute s | memory s | collective s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for name in sorted(recs):
+        r = recs[name]
+        if not r.get("wash") or r.get("status") != "ok":
+            continue
+        mesh = "x".join(str(m) for m in r["mesh"])
+        lines.append(
+            f"| {name} | {mesh} | {r.get('mixing')} | "
+            f"{sci(r.get('bytes_collective-permute', 0))} | "
+            f"{sci(r.get('bytes_all-reduce', 0))} | "
+            f"{sci(r.get('bytes_all-to-all', 0))} | "
+            f"{sci(r['compute_s'])} | {sci(r['memory_s'])} | {sci(r['collective_s'])} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="benchmarks/dryrun")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "sp", "mp", "wash"])
+    args = ap.parse_args()
+    recs = load(args.out_dir)
+    if args.section in ("all", "sp"):
+        print("### Single-pod baseline (16×16 = 256 chips)\n")
+        print(baseline_table(recs, "_sp"))
+    if args.section in ("all", "mp"):
+        print("\n### Multi-pod proof (2×16×16 = 512 chips)\n")
+        print(baseline_table(recs, "_mp"))
+    if args.section in ("all", "wash"):
+        print("\n### WASH population steps\n")
+        print(wash_table(recs))
+
+
+if __name__ == "__main__":
+    main()

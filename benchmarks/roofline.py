@@ -1,0 +1,57 @@
+"""Roofline table (deliverable g): reads the dry-run JSONs and prints, per
+(arch × shape × mesh), the three roofline terms, the dominant bottleneck,
+MODEL_FLOPS/HLO_FLOPS, and a one-line lever on the dominant term."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+LEVERS = {
+    "compute_s": "raise arithmetic intensity (larger per-chip tiles, fuse "
+                 "small ops, bf16 everywhere)",
+    "memory_s": "cut HBM traffic: blockwise/flash attention (no S×S scores), "
+                "remat instead of storing, fuse elementwise chains",
+    "collective_s": "reshard: overlap grad all-reduce with backward, "
+                    "reduce-scatter instead of all-reduce, keep activations "
+                    "on fewer axes",
+}
+
+
+def load(out_dir: str = "benchmarks/dryrun") -> List[Dict]:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        r = json.load(open(p))
+        r["_file"] = os.path.basename(p)
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = True, out_dir: str = "benchmarks/dryrun"):
+    rows = []
+    for r in load(out_dir):
+        tag = r["_file"].replace(".json", "")
+        if r.get("status") == "skip":
+            rows.append((f"roofline_{tag}", 0.0, f"status=skip;note={r['note']}"))
+            continue
+        if r.get("status") != "ok":
+            rows.append((f"roofline_{tag}", 0.0, f"status=ERROR;err={r.get('error','?')}"))
+            continue
+        dom = r["dominant"]
+        derived = (
+            f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+            f"collective_s={r['collective_s']:.3e};dominant={dom};"
+            f"model_flops={r['model_flops']:.3e};"
+            f"useful_ratio={r['useful_flops_ratio'] and round(r['useful_flops_ratio'], 3)};"
+            f"lever={LEVERS[dom]}"
+        )
+        rows.append((f"roofline_{tag}", 0.0, derived))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks._util import print_rows
+
+    print_rows(run())

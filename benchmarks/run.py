@@ -1,0 +1,68 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default is the quick suite
+(~15 min on 1 CPU core); pass --full for the long versions and --only to
+select modules.
+
+  table1  comm_volume            (paper Tab. 1, analytic + HLO-measured)
+  table2  accuracy_heterogeneous (paper Tab. 2 pattern)
+  table3  accuracy_homogeneous   (paper Tab. 3 pattern)
+  fig2    consensus_distance     (paper Fig. 2)
+  fig3    toy2d                  (paper Fig. 3)
+  fig5a   ablation_probability   (paper Fig. 5a)
+  fig5b   ablation_start_stop    (paper Fig. 5b)
+  tab4    ablation_schedule      (paper Tab. 4)
+  kernels kernels_bench          (Pallas kernels, interpret mode)
+  roofline roofline              (deliverable g, from dry-run JSONs)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks._util import print_rows
+
+MODULES = {
+    "table1": "benchmarks.comm_volume",
+    "table2": "benchmarks.accuracy_heterogeneous",
+    "table3": "benchmarks.accuracy_homogeneous",
+    "fig2": "benchmarks.consensus_distance",
+    "fig3": "benchmarks.toy2d",
+    "fig5a": "benchmarks.ablation_probability",
+    "fig5b": "benchmarks.ablation_start_stop",
+    "tab4": "benchmarks.ablation_schedule",
+    "fig6": "benchmarks.interpolation_heatmap",
+    "kernels": "benchmarks.kernels_bench",
+    "roofline": "benchmarks.roofline",
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(MODULES))
+    args = ap.parse_args()
+
+    names = list(MODULES) if not args.only else args.only.split(",")
+    print("name,us_per_call,derived")
+    failed = False
+    for name in names:
+        modname = MODULES[name]
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            rows = mod.run(quick=not args.full)
+            print_rows(rows)
+            print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+        except Exception:
+            failed = True
+            print(f"# {name} FAILED:\n" + traceback.format_exc(), file=sys.stderr)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

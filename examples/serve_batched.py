@@ -1,0 +1,66 @@
+"""Serve a WASH-averaged model with batched requests (prefill + decode).
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Quick-trains a tiny population on the Markov LM task, averages it, then
+serves a batch of prompts through the KV-cache engine and reports
+next-token accuracy against the generating chain (the averaged model beats
+chance by a wide margin) and decode throughput.
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core import averaging as avg
+from repro.core.mixing import MixingConfig
+from repro.data import make_lm_task, sample_tokens
+from repro.models import transformer as M
+from repro.serving import generate
+from repro.train import train_population
+
+
+def main():
+    key = jax.random.key(0)
+    cfg = ModelConfig(name="tiny-lm", num_layers=2, d_model=96, num_heads=4,
+                      num_kv_heads=2, d_ff=192, vocab_size=128, dtype="float32")
+    task = make_lm_task(jax.random.fold_in(key, 1), vocab=cfg.vocab_size)
+
+    def data_fn(m, step, k):
+        return {"tokens": sample_tokens(task, k, 8, 48)}
+
+    def loss_fn(params, batch):
+        loss, _ = M.loss_fn(params, cfg, batch)
+        return loss
+
+    print("training a 3-member WASH population on the Markov LM task...")
+    res = train_population(
+        key, lambda k: M.init_params(k, cfg), loss_fn, data_fn,
+        TrainConfig(population=3, optimizer="adamw", lr=2e-3, total_steps=60),
+        MixingConfig(kind="wash", base_p=0.02, mode="dense"),
+        cfg.num_layers, record_every=50,
+    )
+    model = avg.uniform_soup(res.population)
+    print(f"member losses -> {res.history['loss'][-1]:.3f}")
+
+    # batched serving
+    batch = 8
+    prompts = sample_tokens(task, jax.random.fold_in(key, 2), batch, 24)
+    t0 = time.time()
+    out = generate(model, cfg, {"tokens": prompts}, max_new_tokens=16)
+    dt = time.time() - t0
+    new_tokens = out[:, 24:]
+
+    # the chain's own most-likely continuation for each position
+    pred = jnp.argmax(task.table, axis=-1)
+    hits = float(jnp.mean(new_tokens[:, 1:] == pred[new_tokens[:, :-1]]))
+    print(f"served {batch} prompts x 16 new tokens in {dt:.1f}s "
+          f"({batch*16/dt:.0f} tok/s on CPU)")
+    print(f"averaged model follows the chain's argmax {hits:.0%} of steps "
+          f"(chance {1/cfg.vocab_size:.1%})")
+
+
+if __name__ == "__main__":
+    main()

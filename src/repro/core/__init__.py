@@ -1,0 +1,35 @@
+"""Core WASH library: population shuffling, mixing strategies, soups."""
+
+from repro.core.mixing import MixingConfig, mix_collective, mix_stacked
+from repro.core.shuffle import (
+    apply_plan_collective,
+    apply_plan_stacked,
+    make_plan,
+)
+from repro.core.averaging import (
+    ensemble_accuracy,
+    greedy_soup,
+    uniform_soup,
+)
+from repro.core.consensus import (
+    avg_distance_to_consensus,
+    consensus,
+    sq_distance_to_consensus,
+)
+from repro.core import population
+
+__all__ = [
+    "MixingConfig",
+    "mix_collective",
+    "mix_stacked",
+    "make_plan",
+    "apply_plan_stacked",
+    "apply_plan_collective",
+    "uniform_soup",
+    "greedy_soup",
+    "ensemble_accuracy",
+    "consensus",
+    "sq_distance_to_consensus",
+    "avg_distance_to_consensus",
+    "population",
+]

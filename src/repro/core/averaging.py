@@ -1,0 +1,78 @@
+"""End-of-training evaluation strategies (paper §4 'Evaluation strategy').
+
+  Ensemble   : average the *predictions* (softmax probs) of all members.
+  Averaged   : uniform weight soup  θ̄ = (1/N) Σ θ_n  (UniformSoup / AvgSoup).
+  GreedySoup : add members in decreasing val-accuracy order, keep a member
+               only if it improves val accuracy of the running soup.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import population as pop
+
+PyTree = Any
+
+
+def uniform_soup(stacked: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), stacked)
+
+
+def soup_of(stacked: PyTree, indices: List[int]) -> PyTree:
+    idx = jnp.asarray(indices)
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x[idx], axis=0), stacked)
+
+
+def ensemble_logprobs(
+    apply_fn: Callable[[PyTree, Any], jax.Array], stacked: PyTree, batch
+) -> jax.Array:
+    """log of the member-averaged softmax (the paper's Ensemble)."""
+    logits = jax.vmap(lambda p: apply_fn(p, batch))(stacked)  # (N, B, C)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.log(jnp.mean(probs, axis=0) + 1e-9)
+
+
+def ensemble_accuracy(apply_fn, stacked, batch, labels) -> jax.Array:
+    lp = ensemble_logprobs(apply_fn, stacked, batch)
+    return jnp.mean(jnp.argmax(lp, axis=-1) == labels)
+
+
+def member_accuracies(apply_fn, stacked, batch, labels) -> jax.Array:
+    logits = jax.vmap(lambda p: apply_fn(p, batch))(stacked)
+    return jnp.mean(jnp.argmax(logits, axis=-1) == labels[None], axis=-1)
+
+
+def model_accuracy(apply_fn, params, batch, labels) -> jax.Array:
+    logits = apply_fn(params, batch)
+    return jnp.mean(jnp.argmax(logits, axis=-1) == labels)
+
+
+def greedy_soup(
+    apply_fn: Callable, stacked: PyTree, val_batch, val_labels
+) -> PyTree:
+    """GreedySoup of Wortsman et al. (51), as evaluated in the paper."""
+    accs = member_accuracies(apply_fn, stacked, val_batch, val_labels)
+    order = list(jnp.argsort(-accs))
+    chosen: List[int] = [int(order[0])]
+    best = float(model_accuracy(apply_fn, soup_of(stacked, chosen), val_batch, val_labels))
+    for i in order[1:]:
+        trial = chosen + [int(i)]
+        acc = float(model_accuracy(apply_fn, soup_of(stacked, trial), val_batch, val_labels))
+        if acc >= best:
+            chosen, best = trial, acc
+    return soup_of(stacked, chosen)
+
+
+def interpolate(stacked: PyTree, weights) -> PyTree:
+    """Arbitrary convex combination (Fig. 6 interpolation heatmaps)."""
+    w = jnp.asarray(weights)
+    w = w / jnp.sum(w)
+    n = pop.population_size(stacked)
+    assert w.shape == (n,)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.tensordot(w, x, axes=(0, 0)), stacked
+    )

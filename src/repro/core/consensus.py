@@ -1,0 +1,50 @@
+"""Consensus (averaged-model) distance metrics — paper Fig. 2 / Eq. 2 / Eq. 5."""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def consensus(population: PyTree) -> PyTree:
+    """θ̄ = mean over the ens axis."""
+    return jax.tree_util.tree_map(lambda x: jnp.mean(x, axis=0), population)
+
+
+def sq_distance_to_consensus(population: PyTree) -> jax.Array:
+    """Σ_n ‖θ_n − θ̄‖² — the exact quantity preserved by Eq. (5)."""
+    total = jnp.zeros((), jnp.float32)
+    for x in jax.tree_util.tree_leaves(population):
+        xc = x.astype(jnp.float32)
+        mean = jnp.mean(xc, axis=0, keepdims=True)
+        total = total + jnp.sum((xc - mean) ** 2)
+    return total
+
+
+def avg_distance_to_consensus(population: PyTree) -> jax.Array:
+    """(1/N) Σ_n ‖θ_n − θ̄‖ — the Fig. 2 trace."""
+    leaves = jax.tree_util.tree_leaves(population)
+    n = leaves[0].shape[0]
+    per_member = jnp.zeros((n,), jnp.float32)
+    for x in leaves:
+        xc = x.astype(jnp.float32).reshape(n, -1)
+        mean = jnp.mean(xc, axis=0, keepdims=True)
+        per_member = per_member + jnp.sum((xc - mean) ** 2, axis=1)
+    return jnp.mean(jnp.sqrt(per_member))
+
+
+def pairwise_distance(population: PyTree) -> jax.Array:
+    """Mean pairwise L2 distance between members (diversity diagnostic)."""
+    leaves = jax.tree_util.tree_leaves(population)
+    n = leaves[0].shape[0]
+    sq = jnp.zeros((n, n), jnp.float32)
+    for x in leaves:
+        xc = x.astype(jnp.float32).reshape(n, -1)
+        sq = sq + jnp.sum((xc[:, None] - xc[None]) ** 2, axis=-1)
+    dist = jnp.sqrt(sq)
+    mask = 1.0 - jnp.eye(n)
+    return jnp.sum(dist * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,221 @@
+"""Population mixing strategies.
+
+After every optimizer step the training loop calls ``mix`` on the stacked
+population (or, in the distributed path, each member calls the collective
+variant under ``shard_map``).  Implemented strategies:
+
+  none      independent training (paper's Baseline)
+  wash      parameter shuffling (paper Alg. 1)
+  wash_opt  WASH + the same shuffle replayed on the optimizer moments
+  papa      EMA pull toward consensus every T steps (PAPA, Eq. 1)
+  papa_all  hard averaging every T_all steps (PAPA-all == DART)
+
+All strategies report their communication volume (scalars sent per member
+this step) so paper Table 1 is *measured*, not asserted.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import shuffle as shf
+from repro.core.schedules import active_window
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MixingConfig:
+    kind: str = "wash"           # none | wash | wash_opt | papa | papa_all
+    base_p: float = 0.001        # WASH base probability (first layer)
+    schedule: str = "decreasing" # decreasing | constant | increasing (Eq. 6 / Tab. 4)
+    mode: str = "dense"          # dense | bucketed (see core.shuffle)
+    papa_alpha: float = 0.99     # PAPA EMA coefficient (Eq. 1)
+    papa_every: int = 10         # PAPA all-reduce period T
+    papa_all_every: int = 1000   # PAPA-all / DART averaging period
+    start_step: int = 0          # Fig. 5b ablation window
+    stop_step: Optional[int] = None
+
+    def shuffles_optimizer(self) -> bool:
+        return self.kind == "wash_opt"
+
+
+def momentum_like_leaves(opt_state: PyTree, params: PyTree) -> PyTree:
+    """The slice of the optimizer state that WASH+Opt shuffles.
+
+    Our optimizers (repro.optim) store moments in a dict with the same
+    sub-structure as params under keys 'mu' (SGD/Adam first moment) and
+    optionally 'nu'.  Anything else (step counters) is left alone.
+    """
+    return {k: opt_state[k] for k in ("mu", "nu") if k in opt_state}
+
+
+def _wash_step_stacked(
+    key, params, opt_state, cfg: MixingConfig, layer_ids, total_layers
+) -> Tuple[PyTree, PyTree, jax.Array]:
+    plan = shf.make_plan(
+        key, params, layer_ids, total_layers, cfg.base_p, cfg.schedule, cfg.mode
+    )
+    n = jax.tree_util.tree_leaves(params)[0].shape[0]
+    new_params = shf.apply_plan_stacked(plan, params, cfg.mode)
+    new_opt = opt_state
+    comm = shf.plan_sent_scalars(plan, n, cfg.mode)
+    if cfg.shuffles_optimizer() and opt_state is not None:
+        moments = momentum_like_leaves(opt_state, params)
+        new_opt = dict(opt_state)
+        for mk, mv in moments.items():
+            new_opt[mk] = shf.apply_plan_stacked(plan, mv, cfg.mode)
+            comm = comm + shf.plan_sent_scalars(plan, n, cfg.mode)
+    return new_params, new_opt, comm
+
+
+def _papa_pull_stacked(params: PyTree, alpha: float) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: alpha * x + (1.0 - alpha) * jnp.mean(x, axis=0, keepdims=True),
+        params,
+    )
+
+
+def _average_stacked(params: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(jnp.mean(x, axis=0, keepdims=True), x.shape),
+        params,
+    )
+
+
+def mixing_due(step: int, cfg: MixingConfig) -> bool:
+    """Python-side period/window test so jitted mixing is unconditional."""
+    if cfg.kind == "none" or not active_window(step, cfg.start_step, cfg.stop_step):
+        return False
+    if cfg.kind in ("wash", "wash_opt"):
+        return True
+    if cfg.kind == "papa":
+        return step > 0 and step % cfg.papa_every == 0
+    if cfg.kind == "papa_all":
+        return step > 0 and step % cfg.papa_all_every == 0
+    raise ValueError(f"unknown mixing kind {cfg.kind!r}")
+
+
+def mix_once(
+    key: jax.Array,
+    params: PyTree,
+    opt_state: Optional[PyTree],
+    cfg: MixingConfig,
+    layer_ids: PyTree,
+    total_layers: int,
+) -> Tuple[PyTree, Optional[PyTree], jax.Array]:
+    """Unconditionally apply the strategy's op (period logic lives in
+    :func:`mixing_due`).  Safe to jit with cfg/layer_ids static."""
+    zero = jnp.zeros((), jnp.float32)
+    n = jax.tree_util.tree_leaves(params)[0].shape[0]
+    d = sum(x.size // n for x in jax.tree_util.tree_leaves(params))
+    if cfg.kind in ("wash", "wash_opt"):
+        return _wash_step_stacked(key, params, opt_state, cfg, layer_ids, total_layers)
+    if cfg.kind == "papa":
+        return _papa_pull_stacked(params, cfg.papa_alpha), opt_state, zero + float(d)
+    if cfg.kind == "papa_all":
+        return _average_stacked(params), opt_state, zero + float(d)
+    return params, opt_state, zero
+
+
+def mix_stacked(
+    step: int,
+    key: jax.Array,
+    params: PyTree,
+    opt_state: Optional[PyTree],
+    cfg: MixingConfig,
+    layer_ids: PyTree,
+    total_layers: int,
+) -> Tuple[PyTree, Optional[PyTree], jax.Array]:
+    """Apply the configured mixing strategy to a stacked population.
+
+    ``step`` must be a Python int (the period/window tests are static so
+    no-mix steps trace to a no-op instead of a masked collective).
+    Returns (params, opt_state, scalars_sent_per_member).
+    """
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.kind == "none" or not active_window(step, cfg.start_step, cfg.stop_step):
+        return params, opt_state, zero
+
+    n = jax.tree_util.tree_leaves(params)[0].shape[0]
+    d = sum(x.size // n for x in jax.tree_util.tree_leaves(params))
+
+    if cfg.kind in ("wash", "wash_opt"):
+        return _wash_step_stacked(key, params, opt_state, cfg, layer_ids, total_layers)
+
+    if cfg.kind == "papa":
+        if step % cfg.papa_every == 0 and step > 0:
+            # all-reduce of every parameter: d scalars per member (paper's
+            # Table 1 accounting; a ring all-reduce is 2d(N-1)/N).
+            return _papa_pull_stacked(params, cfg.papa_alpha), opt_state, zero + float(d)
+        return params, opt_state, zero
+
+    if cfg.kind == "papa_all":
+        if step % cfg.papa_all_every == 0 and step > 0:
+            return _average_stacked(params), opt_state, zero + float(d)
+        return params, opt_state, zero
+
+    raise ValueError(f"unknown mixing kind {cfg.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# collective variants (one member per shard_map instance, ens as mesh axis)
+# ---------------------------------------------------------------------------
+
+
+def mix_collective(
+    step: int,
+    key: jax.Array,
+    params: PyTree,
+    opt_state: Optional[PyTree],
+    cfg: MixingConfig,
+    layer_ids: PyTree,
+    total_layers: int,
+    axis_name: str,
+) -> Tuple[PyTree, Optional[PyTree], jax.Array]:
+    """Distributed mixing: called per member under shard_map(axis_name=ens).
+
+    WASH uses the bucketed plan (built from the *shared* key, so every
+    member computes identical indices) and ``ppermute`` exchanges; PAPA
+    uses ``pmean`` (all-reduce).
+    """
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.kind == "none" or not active_window(step, cfg.start_step, cfg.stop_step):
+        return params, opt_state, zero
+
+    n = lax.axis_size(axis_name)
+    d = sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+    if cfg.kind in ("wash", "wash_opt"):
+        plan = shf.make_plan(
+            key, params, layer_ids, total_layers, cfg.base_p, cfg.schedule,
+            mode="bucketed", n=n,
+        )
+        new_params = shf.apply_plan_collective(plan, params, axis_name)
+        new_opt = opt_state
+        comm = shf.plan_sent_scalars(plan, n, mode="bucketed")
+        if cfg.shuffles_optimizer() and opt_state is not None:
+            new_opt = dict(opt_state)
+            for mk, mv in momentum_like_leaves(opt_state, params).items():
+                new_opt[mk] = shf.apply_plan_collective(plan, mv, axis_name)
+                comm = comm + shf.plan_sent_scalars(plan, n, mode="bucketed")
+        return new_params, new_opt, zero + comm
+
+    if cfg.kind == "papa" and step % cfg.papa_every == 0 and step > 0:
+        pulled = jax.tree_util.tree_map(
+            lambda x: cfg.papa_alpha * x
+            + (1.0 - cfg.papa_alpha) * lax.pmean(x, axis_name),
+            params,
+        )
+        return pulled, opt_state, zero + float(d)
+
+    if cfg.kind == "papa_all" and step % cfg.papa_all_every == 0 and step > 0:
+        avg = jax.tree_util.tree_map(lambda x: lax.pmean(x, axis_name), params)
+        return avg, opt_state, zero + float(d)
+
+    return params, opt_state, zero

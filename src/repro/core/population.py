@@ -1,0 +1,74 @@
+"""Stacked-pytree populations.
+
+A *population* of N models is represented as a single pytree whose every
+leaf carries a leading ``ens`` axis of size N.  This representation works
+unchanged whether the ens axis is
+
+  * vmapped on a single host (faithful-reference mode),
+  * sharded over a dedicated ``ens`` mesh axis, or
+  * sharded over the ``pod`` axis of the production multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, List
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def population_size(population: PyTree) -> int:
+    leaves = jax.tree_util.tree_leaves(population)
+    if not leaves:
+        raise ValueError("empty population pytree")
+    return int(leaves[0].shape[0])
+
+
+def stack(members: List[PyTree]) -> PyTree:
+    """Stack a list of per-member pytrees into one stacked pytree."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *members)
+
+
+def unstack(population: PyTree) -> List[PyTree]:
+    n = population_size(population)
+    return [jax.tree_util.tree_map(lambda x: x[i], population) for i in range(n)]
+
+
+def member(population: PyTree, i) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x[i], population)
+
+
+def replicate(params: PyTree, n: int) -> PyTree:
+    """Same-initialization population (the paper's default for WASH)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + x.shape).copy(), params
+    )
+
+
+def init_population(
+    init_fn: Callable[[jax.Array], PyTree],
+    key: jax.Array,
+    n: int,
+    same_init: bool = True,
+) -> PyTree:
+    """Initialize a population.
+
+    ``same_init=True`` follows WASH (all members start at θ0); ``False``
+    follows PAPA's setup (independent initializations).
+    """
+    if same_init:
+        return replicate(init_fn(key), n)
+    keys = jax.random.split(key, n)
+    return stack([init_fn(k) for k in keys])
+
+
+def map_members(fn: Callable, population: PyTree, *rest) -> PyTree:
+    """vmap a per-member function over the ens axis."""
+    return jax.vmap(fn)(population, *rest)
+
+
+def num_params(params: PyTree) -> int:
+    """Total scalar count of a single member (population leaves: drop axis 0)."""
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(params))

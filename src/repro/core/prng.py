@@ -1,0 +1,29 @@
+"""Shared-randomness discipline for population training.
+
+WASH requires every member of the population to agree on (a) which
+coordinates are shuffled this step and (b) the permutation applied to each
+coordinate.  We derive everything from a *shared* base key folded with the
+step index, then fold in a stable per-leaf index.  In the distributed
+(`shard_map`) path every member computes the same plan locally from the same
+key — zero extra communication for coordination, exactly like the paper's
+"a permutation is randomly chosen" with a synchronized seed.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def step_key(base_key: jax.Array, step) -> jax.Array:
+    """Key shared by all members for a given training step."""
+    return jax.random.fold_in(base_key, step)
+
+
+def leaf_key(key: jax.Array, leaf_index: int) -> jax.Array:
+    """Per-leaf key derived from the shared step key."""
+    return jax.random.fold_in(key, leaf_index)
+
+
+def member_keys(key: jax.Array, n: int) -> jax.Array:
+    """Independent keys per member (for data order / augmentations)."""
+    return jax.random.split(key, n)

@@ -1,0 +1,104 @@
+"""Per-member data augmentations & regularizations (paper Appendix).
+
+The heterogeneous setting draws, per member, a (mixup, label-smoothing,
+cutmix, random-erasing) policy from the same menus as the paper
+(CIFAR menus).  All augmentations produce *soft labels*, so the classifier
+loss is a soft cross-entropy throughout.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+MIXUP_MENU = (0.0, 0.5, 1.0)
+SMOOTH_MENU = (0.0, 0.05, 0.1)
+CUTMIX_MENU = (0.0, 0.5, 1.0)
+ERASE_MENU = (0.0, 0.15, 0.35)
+
+
+@dataclasses.dataclass(frozen=True)
+class AugmentPolicy:
+    mixup: float = 0.0
+    smooth: float = 0.0
+    cutmix: float = 0.0
+    erase: float = 0.0
+
+
+def draw_policy(key: jax.Array) -> AugmentPolicy:
+    ks = jax.random.split(key, 4)
+    pick = lambda k, menu: menu[int(jax.random.randint(k, (), 0, len(menu)))]
+    return AugmentPolicy(
+        mixup=pick(ks[0], MIXUP_MENU),
+        smooth=pick(ks[1], SMOOTH_MENU),
+        cutmix=pick(ks[2], CUTMIX_MENU),
+        erase=pick(ks[3], ERASE_MENU),
+    )
+
+
+def member_policies(key: jax.Array, n: int, heterogeneous: bool):
+    if not heterogeneous:
+        return [AugmentPolicy() for _ in range(n)]
+    return [draw_policy(jax.random.fold_in(key, i)) for i in range(n)]
+
+
+def _one_hot(labels, num_classes, smooth):
+    oh = jax.nn.one_hot(labels, num_classes)
+    return oh * (1.0 - smooth) + smooth / num_classes
+
+
+def apply_policy(
+    key: jax.Array,
+    images: jax.Array,
+    labels: jax.Array,
+    num_classes: int,
+    policy: AugmentPolicy,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (images, soft_labels)."""
+    B, H, W, _ = images.shape
+    y = _one_hot(labels, num_classes, policy.smooth)
+    k_mix, k_cut, k_er, k_perm, k_lam = jax.random.split(key, 5)
+    perm = jax.random.permutation(k_perm, B)
+
+    if policy.mixup > 0.0:
+        lam = jax.random.beta(k_lam, policy.mixup, policy.mixup, ())
+        images = lam * images + (1 - lam) * images[perm]
+        y = lam * y + (1 - lam) * y[perm]
+
+    if policy.cutmix > 0.0:
+        lam = jax.random.beta(k_cut, policy.cutmix, policy.cutmix, ())
+        cut = jnp.sqrt(1.0 - lam)
+        ch, cw = (cut * H).astype(jnp.int32), (cut * W).astype(jnp.int32)
+        cy = jax.random.randint(k_cut, (), 0, H)
+        cx = jax.random.randint(jax.random.fold_in(k_cut, 1), (), 0, W)
+        yy = jnp.arange(H)[None, :, None, None]
+        xx = jnp.arange(W)[None, None, :, None]
+        inside = (
+            (yy >= cy - ch // 2) & (yy < cy + ch // 2)
+            & (xx >= cx - cw // 2) & (xx < cx + cw // 2)
+        )
+        images = jnp.where(inside, images[perm], images)
+        area = jnp.clip(ch * cw / (H * W), 0.0, 1.0)
+        y = (1 - area) * y + area * y[perm]
+
+    if policy.erase > 0.0:
+        eh = max(int(policy.erase * H), 1)
+        ey = jax.random.randint(k_er, (B,), 0, H - eh + 1)
+        ex = jax.random.randint(jax.random.fold_in(k_er, 1), (B,), 0, W - eh + 1)
+        yy = jnp.arange(H)[None, :, None, None]
+        xx = jnp.arange(W)[None, None, :, None]
+        inside = (
+            (yy >= ey[:, None, None, None]) & (yy < (ey + eh)[:, None, None, None])
+            & (xx >= ex[:, None, None, None]) & (xx < (ex + eh)[:, None, None, None])
+        )
+        images = jnp.where(inside, 0.0, images)
+
+    return images, y
+
+
+def soft_cross_entropy(logits, soft_labels):
+    lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return -jnp.mean(jnp.sum(soft_labels * lp, axis=-1))

@@ -1,0 +1,94 @@
+"""Deterministic synthetic data pipelines.
+
+No datasets ship in this container, so both tasks are generated from seeded
+PRNG with enough *learnable structure* that optimization dynamics (loss
+decrease, ensemble diversity, averaged-model behaviour) are meaningful:
+
+  * image task — a Gaussian-mixture over class prototypes (CIFAR stand-in);
+  * LM task    — an order-1 Markov chain with a random, Zipf-weighted
+                 transition table (perplexity is learnable down to the chain
+                 entropy).
+
+Every member of a WASH population draws its *own data order* (different
+keys), matching the paper's training setup.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# image classification task (CIFAR stand-in)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageTask:
+    prototypes: jax.Array  # (C, H, W, 3)
+    num_classes: int
+    noise: float
+
+
+def make_image_task(
+    key: jax.Array, num_classes: int = 10, hw: int = 16, noise: float = 0.35
+) -> ImageTask:
+    protos = jax.random.normal(key, (num_classes, hw, hw, 3)) * 0.8
+    # low-pass the prototypes so nearby pixels correlate (image-like)
+    k = jnp.ones((3, 3, 1, 1)) / 9.0
+    smooth = jax.lax.conv_general_dilated(
+        protos.transpose(0, 3, 1, 2).reshape(-1, 1, hw, hw),
+        k.transpose(3, 2, 0, 1),
+        (1, 1),
+        "SAME",
+    )
+    protos = smooth.reshape(num_classes, 3, hw, hw).transpose(0, 2, 3, 1)
+    return ImageTask(protos, num_classes, noise)
+
+
+def sample_images(task: ImageTask, key: jax.Array, batch: int):
+    ky, kn = jax.random.split(key)
+    labels = jax.random.randint(ky, (batch,), 0, task.num_classes)
+    images = task.prototypes[labels] + task.noise * jax.random.normal(
+        kn, (batch,) + task.prototypes.shape[1:]
+    )
+    return images, labels
+
+
+def eval_images(task: ImageTask, key: jax.Array, batch: int = 512):
+    """Fixed held-out batch (same key -> same eval set)."""
+    return sample_images(task, key, batch)
+
+
+# ---------------------------------------------------------------------------
+# LM task (Markov chain)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMTask:
+    table: jax.Array  # (V, V) transition logits
+    vocab: int
+
+
+def make_lm_task(key: jax.Array, vocab: int = 256, branching: float = 4.0) -> LMTask:
+    # Zipf-ish sparse transitions: each state prefers a few successors.
+    logits = jax.random.gumbel(key, (vocab, vocab)) * branching
+    return LMTask(logits, vocab)
+
+
+def sample_tokens(task: LMTask, key: jax.Array, batch: int, seq: int):
+    k0, ks = jax.random.split(key)
+    x0 = jax.random.randint(k0, (batch,), 0, task.vocab)
+
+    def step(x, k):
+        nxt = jax.random.categorical(k, task.table[x])
+        return nxt, nxt
+
+    keys = jax.random.split(ks, seq - 1)
+    _, rest = jax.lax.scan(step, x0, keys)
+    return jnp.concatenate([x0[None], rest], axis=0).T  # (batch, seq)

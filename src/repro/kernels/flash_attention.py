@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (blockwise streaming softmax), GQA + windows.
+
+Targets the prefill/training hot-spot of the dense/hybrid architectures.
+Layout per grid step: one (batch, q-head) pair and one query block reside
+in VMEM; K/V for the matching kv-head stream through an inner fori_loop in
+``block_k``-sized slices.  Running max/sum rescaling is the standard
+numerically-stable streaming softmax.  Causal and sliding-window masks are
+applied with position arithmetic, and fully-masked K blocks are skipped by
+clamping the loop's upper bound (the TPU win: no wasted MXU work past the
+diagonal).
+
+VMEM budget per step (bf16): q block (block_q × hd) + K/V (S × hd each).
+For the 32k prefill at hd=128 that is ~8 MB per tensor — within v5e's
+16 MB when block_q ≤ 512; longer sequences must shard S over the mesh
+first (which the launcher's sequence sharding does).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, out_ref, *,
+    block_k: int, scale: float, causal: bool, window,
+):
+    bq, hd = q_ref.shape
+    s = k_ref.shape[0]
+    qi = pl.program_id(1)
+    q0 = qi * bq  # absolute position of the first query in this block
+
+    q = q_ref[...].astype(jnp.float32) * scale
+
+    nkv = s // block_k
+    if causal:
+        # highest kv block any query in this block can see (skip the rest)
+        hi = (q0 + bq + block_k - 1) // block_k
+        nkv_eff = jnp.minimum(nkv, hi)
+    else:
+        nkv_eff = nkv
+
+    def body(j, carry):
+        acc, m_prev, l_prev = carry
+        k = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        scores = q @ k.T  # (bq, block_k)
+        qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 0)
+        kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, block_k), 1)
+        mask = jnp.ones((bq, block_k), bool)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        scores = jnp.where(mask, scores, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, m, l = jax.lax.fori_loop(0, nkv_eff, body, (acc0, m0, l0))
+    out_ref[...] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(out_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window=None,
+    block_q: int = 256,
+    block_k: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd) -> (B,S,H,hd).  GQA: H % KV == 0."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, "pad S to block multiples"
+    scale = hd ** -0.5
+
+    # fold (B, H) into the grid's leading axis; map q-head -> kv-head
+    qh = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kh = k.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+    vh = v.transpose(0, 2, 1, 3).reshape(B * KV, S, hd)
+
+    kernel = functools.partial(
+        _flash_kernel, block_k=block_k, scale=scale, causal=causal, window=window
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, S // block_q),
+        in_specs=[
+            pl.BlockSpec((None, block_q, hd), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((None, S, hd), lambda h, i: (h // g, 0, 0)),
+            pl.BlockSpec((None, S, hd), lambda h, i: (h // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, block_q, hd), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        interpret=interpret,
+    )(qh, kh, vh)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,0 +1,38 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True (this container is CPU-only; the kernels
+target TPU).  On real TPU hardware pass interpret=False.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
+from repro.kernels.wash_shuffle import wash_shuffle_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def wash_shuffle(x, perm, mask, block_d: int = 2048, interpret: bool = True):
+    return wash_shuffle_pallas(x, perm, mask, block_d=block_d, interpret=interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "window", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q, k, v, causal: bool = True, window=None,
+    block_q: int = 256, block_k: int = 256, interpret: bool = True,
+):
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, chunk: int = 16, interpret: bool = True):
+    return rwkv6_scan_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def wash_shuffle_ref(x: jax.Array, perm: jax.Array, mask: jax.Array) -> jax.Array:
+    """x: (N, D); perm: (N, D); mask: (D,)."""
+    shuffled = jnp.take_along_axis(x, perm, axis=0)
+    return jnp.where(mask[None, :], shuffled, x)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=None) -> jax.Array:
+    """q: (B,S,H,hd); k/v: (B,S,KV,hd) -> (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    qf = q.reshape(B, S, KV, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qf, k.astype(jnp.float32)) / (hd ** 0.5)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask = mask & (j <= i)
+    if window is not None:
+        mask = mask & (j > i - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def rwkv6_scan_ref(r, k, v, w, u) -> jax.Array:
+    """r/k/v/w: (B,T,H,hd); u: (H,hd) -> y (B,T,H,hd)."""
+    B, T, H, hd = r.shape
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t.astype(jnp.float32), v_t.astype(jnp.float32))
+        y = jnp.einsum(
+            "bhk,bhkv->bhv", r_t.astype(jnp.float32), S + u[None, :, :, None] * kv
+        )
+        S = w_t.astype(jnp.float32)[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    S0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype)

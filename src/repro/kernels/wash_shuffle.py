@@ -1,0 +1,68 @@
+"""Pallas TPU kernel for the dense WASH shuffle (paper Eq. 3).
+
+The dense shuffle is three HBM passes when written naively in jnp
+(uniforms → argsort-take → where).  This kernel fuses the *apply* phase —
+masked cross-member permute-gather — into a single pass over VMEM tiles of
+the stacked (N, D) leaf:
+
+    out[n, i] = x[perm[n, i], i]   if mask[i]
+              = x[n, i]            otherwise
+
+TPU adaptation: the ensemble axis N is tiny (3–16), so the per-coordinate
+gather along axis 0 is realized as an N-way select (VPU-friendly
+compare+select, no hardware gather), while the coordinate axis is tiled to
+``block_d`` lanes in VMEM (128-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _shuffle_kernel(x_ref, perm_ref, mask_ref, out_ref, *, n: int):
+    x = x_ref[...]          # (N, block_d)
+    perm = perm_ref[...]    # (N, block_d) int32
+    mask = mask_ref[...]    # (1, block_d) bool
+    # gather along the tiny ens axis as an N-way select
+    gathered = jnp.zeros_like(x)
+    for m in range(n):
+        gathered = jnp.where(perm == m, x[m][None, :], gathered)
+    out_ref[...] = jnp.where(mask, gathered, x)
+
+
+def wash_shuffle_pallas(
+    x: jax.Array,
+    perm: jax.Array,
+    mask: jax.Array,
+    *,
+    block_d: int = 2048,
+    interpret: bool = True,
+) -> jax.Array:
+    """x: (N, D); perm: (N, D) int32; mask: (D,) bool -> shuffled (N, D)."""
+    n, d = x.shape
+    block_d = min(block_d, d)
+    # pad D to a multiple of block_d
+    pad = (-d) % block_d
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        perm = jnp.pad(perm, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, (0, pad))
+    dp = x.shape[1]
+    grid = (dp // block_d,)
+    out = pl.pallas_call(
+        functools.partial(_shuffle_kernel, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((n, block_d), lambda i: (0, i)),
+            pl.BlockSpec((1, block_d), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((n, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((n, dp), x.dtype),
+        interpret=interpret,
+    )(x, perm, mask[None, :])
+    return out[:, :d]

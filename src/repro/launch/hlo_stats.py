@@ -1,0 +1,164 @@
+"""Extract roofline terms from compiled XLA artifacts.
+
+``cost_analysis`` gives HLO FLOPs and bytes accessed; collective traffic is
+NOT in cost_analysis, so we parse the optimized HLO text and sum the
+result-shape bytes of every collective op (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute).
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import numpy as np
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12  # bf16 FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# one shape token: bf16[2048,512]{1,0:T(8,128)} etc.
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},:()#* ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start|-done)?\(",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\{(\{[\d,{} ]*\})\}|replica_groups=\[[^\]]*\]<=\[[^\]]*\]")
+_PAIR_RE = re.compile(r"source_target_pairs=\{([\d,{} ]*)\}")
+
+
+_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?"
+)
+
+
+def _crosses(line: str, boundary: int) -> bool:
+    """True if the op's communication groups span the pod boundary."""
+    m = re.search(r"replica_groups=\{\{([\d,{} ]*)\}\}", line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [int(x) for x in grp.replace("{", "").replace("}", "").split(",") if x.strip()]
+            if ids and min(ids) < boundary <= max(ids):
+                return True
+        return False
+    m = _PAIR_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).replace("{", " ").replace("}", " ").replace(",", " ").split()]
+        pairs = list(zip(ids[::2], ids[1::2]))
+        return any((a < boundary) != (b < boundary) for a, b in pairs)
+    m = _IOTA_RE.search(line)
+    if m:
+        # iota list: ids = arange(prod(dims)).reshape(dims).transpose(perm)
+        # flattened, then chunked into groups of size S.
+        g, s_sz = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(x) for x in m.group(4).split(",")]
+            ids = ids.transpose(perm)
+        flat = ids.reshape(-1)
+        for i in range(g):
+            grp = flat[i * s_sz : (i + 1) * s_sz]
+            if grp.min() < boundary <= grp.max():
+                return True
+        return False
+    return False
+
+
+def collective_bytes(hlo_text: str, pod_boundary: int = 0) -> Dict[str, int]:
+    """Per-collective-kind result bytes summed over the module.
+
+    ``pod_boundary`` > 0 also attributes bytes of ops whose replica groups
+    span partition ids [0, boundary) and [boundary, ...) — i.e. traffic
+    that must cross the pod-to-pod links — under the key "crosspod".
+    """
+    out = {k: 0 for k in _COLLECTIVES}
+    out["crosspod"] = 0
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # avoid double counting async start/done pairs
+        b = _shape_bytes(shape_str)
+        out[kind] += b
+        if pod_boundary and _crosses(line, pod_boundary):
+            out["crosspod"] += b
+    return out
+
+
+def roofline_terms(
+    flops: float, bytes_hbm: float, coll: Dict[str, int], chips: int
+) -> Dict[str, float]:
+    """All inputs are PER-DEVICE: ``compiled.cost_analysis()`` and
+    ``compiled.as_text()`` describe the per-partition program, so the
+    per-chip roofline terms divide by single-chip peaks only.  (``chips``
+    is kept for the global-FLOPs cross-check ``flops * chips ≈ MODEL_FLOPS``.)
+    """
+    cbytes = float(sum(coll.values()))
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_hbm / HBM_BW,
+        "collective_s": cbytes / ICI_BW,
+        "collective_bytes": cbytes,
+        "global_flops": flops * chips,
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    t = {k: terms[k] for k in ("compute_s", "memory_s", "collective_s")}
+    return max(t, key=t.get)
+
+
+def model_flops(n_params: int, n_active: int, tokens: int) -> float:
+    """6·N·D rule (dense) / 6·N_active·D (MoE) per the assignment."""
+    return 6.0 * n_active * tokens
+
+
+def summarize(cost: dict, hlo_text: str, chips: int, pod_boundary: int = 0) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    bts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text, pod_boundary)
+    cross = coll.pop("crosspod", 0)
+    terms = roofline_terms(flops, bts, coll, chips)
+    terms.update(
+        {
+            "hlo_flops": flops,
+            "hlo_bytes": bts,
+            "dominant": dominant_term(terms),
+            "bytes_crosspod": float(cross),
+            **{f"bytes_{k}": float(v) for k, v in coll.items()},
+        }
+    )
+    return terms

@@ -1,0 +1,45 @@
+"""Production meshes.
+
+All constructors are FUNCTIONS — importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init).
+
+  single pod : (16, 16)        ("data", "model")            — 256 v5e chips
+  multi-pod  : (2, 16, 16)     ("pod", "data", "model")     — 512 chips
+  ensemble   : (N, 256//N, 16) ("ens", "data", "model")     — WASH population
+               single-pod; multi-pod WASH maps ens onto the pod axis.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def _mk(shape, axes):
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return _mk(shape, axes)
+
+
+def make_ensemble_mesh(population: int = 4, *, multi_pod: bool = False):
+    """Mesh with an explicit ens axis for WASH population training.
+
+    Multi-pod: the population IS the pod axis (the paper's distributed
+    story — shuffle crosses the pod boundary, everything else stays inside
+    a pod).  Single-pod: the data axis is split (ens, data).
+    """
+    if multi_pod:
+        assert population == 2, "multi-pod ensemble maps members onto 2 pods"
+        return _mk((2, 16, 16), ("ens", "data", "model"))
+    assert 256 % (population * 16) == 0, "population must divide the data axis"
+    return _mk((population, 256 // (population * 16), 16), ("ens", "data", "model"))
+
+
+def data_axes(mesh) -> tuple:
+    """Axes over which the global batch is sharded."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,75 @@
+"""Input specifications for every (architecture × input shape).
+
+``input_specs`` returns jax.ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for the dry-run; ``concrete_batch`` materializes
+small real batches for smoke tests.
+
+Modality stubs (the one allowed carve-out): audio provides precomputed
+frame embeddings (B, num_frames, d_model); vision provides patch
+embeddings (B, num_patches, d_model).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer as M
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _extra_specs(cfg: ModelConfig, batch: int) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    out: Dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        out["frames"] = SDS((batch, cfg.num_frames, cfg.d_model), dt)
+    if cfg.frontend == "vision":
+        out["patches"] = SDS((batch, cfg.num_patches, cfg.d_model), dt)
+    return out
+
+
+def train_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    return {"tokens": SDS((b, s), jnp.int32), **_extra_specs(cfg, b)}
+
+
+def prefill_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    return train_specs(cfg, shape)
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """serve_step inputs: one new token + a cache of `seq_len` context."""
+    b, s = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: M.init_cache(cfg, b, s))
+    return {"tokens": SDS((b, 1), jnp.int32), "cache": cache, "pos": SDS((), jnp.int32)}
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+# ---------------------------------------------------------------------------
+# concrete batches (smoke tests / examples)
+# ---------------------------------------------------------------------------
+
+
+def concrete_batch(cfg: ModelConfig, key: jax.Array, batch: int, seq: int):
+    ks = jax.random.split(key, 3)
+    out = {"tokens": jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size)}
+    if cfg.frontend == "audio":
+        out["frames"] = jax.random.normal(
+            ks[1], (batch, cfg.num_frames, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    if cfg.frontend == "vision":
+        out["patches"] = jax.random.normal(
+            ks[1], (batch, cfg.num_patches, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
+    return out

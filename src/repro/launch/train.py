@@ -1,0 +1,103 @@
+"""CLI launcher: train a WASH population of any assigned architecture.
+
+CPU-scale entry point (reduced configs train locally; full configs are
+exercised through the dry-run).  Example:
+
+  python -m repro.launch.train --arch llama3.2-3b --reduced \\
+      --population 4 --mixing wash --base-p 0.01 --steps 200
+
+  python -m repro.launch.train --arch qwen3-4b --reduced --mixing papa \\
+      --steps 100 --optimizer adamw --lr 3e-4
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES_BY_NAME, get_arch
+from repro.configs.base import TrainConfig
+from repro.core import averaging as avg
+from repro.core.mixing import MixingConfig
+from repro.data import make_lm_task, sample_tokens
+from repro.launch.specs import concrete_batch
+from repro.models import transformer as M
+from repro.train import checkpoint, train_population
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced (CPU-scale) variant")
+    ap.add_argument("--population", type=int, default=4)
+    ap.add_argument("--mixing", default="wash",
+                    choices=["none", "wash", "wash_opt", "papa", "papa_all"])
+    ap.add_argument("--base-p", type=float, default=0.01)
+    ap.add_argument("--schedule", default="decreasing",
+                    choices=["decreasing", "constant", "increasing"])
+    ap.add_argument("--mode", default="dense", choices=["dense", "bucketed"])
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch-size", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default=None, help="save averaged model here (.npz)")
+    ap.add_argument("--history", default=None, help="dump history JSON here")
+    args = ap.parse_args(argv)
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    key = jax.random.key(args.seed)
+
+    task = make_lm_task(jax.random.fold_in(key, 1), vocab=min(cfg.vocab_size, 512))
+
+    def data_fn(m, step, k):
+        b = concrete_batch(cfg, jax.random.fold_in(k, 10), args.batch_size, args.seq_len)
+        b["tokens"] = sample_tokens(task, k, args.batch_size, args.seq_len) % cfg.vocab_size
+        return b
+
+    def loss_fn(params, batch):
+        loss, _ = M.loss_fn(params, cfg, batch)
+        return loss
+
+    tcfg = TrainConfig(
+        population=args.population, optimizer=args.optimizer, lr=args.lr,
+        total_steps=args.steps, batch_size=args.batch_size, seq_len=args.seq_len,
+        seed=args.seed,
+    )
+    mcfg = MixingConfig(kind=args.mixing, base_p=args.base_p,
+                        schedule=args.schedule, mode=args.mode)
+
+    res = train_population(
+        key, lambda k: M.init_params(k, cfg), loss_fn, data_fn,
+        tcfg, mcfg, cfg.num_layers, record_every=max(args.steps // 10, 1),
+    )
+
+    soup = avg.uniform_soup(res.population)
+    print(f"arch={cfg.name} mixing={args.mixing} steps={args.steps}")
+    print(f"final mean member loss : {res.history['loss'][-1]:.4f}")
+    print(f"consensus distance     : {res.history['consensus'][-1]:.4f}")
+    print(f"scalars sent per member: {res.comm_scalars:.3e}")
+
+    eval_batch = data_fn(0, 0, jax.random.fold_in(key, 777))
+    loss_soup, _ = M.loss_fn(soup, cfg, eval_batch)
+    print(f"averaged-model loss    : {float(loss_soup):.4f}")
+
+    if args.ckpt:
+        checkpoint.save(args.ckpt, soup)
+        print(f"saved averaged model -> {args.ckpt}")
+    if args.history:
+        os.makedirs(os.path.dirname(args.history) or ".", exist_ok=True)
+        with open(args.history, "w") as f:
+            json.dump(res.history, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Model zoo: scanned transformer families + CNN/MLP classifiers."""
+
+from repro.models.transformer import (
+    decode_step,
+    forward_logits,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+from repro.models.cnn import ClassifierConfig, apply_classifier, init_classifier
+
+__all__ = [
+    "init_params",
+    "loss_fn",
+    "forward_logits",
+    "init_cache",
+    "prefill",
+    "decode_step",
+    "ClassifierConfig",
+    "init_classifier",
+    "apply_classifier",
+]

@@ -1,0 +1,136 @@
+"""Image classifiers for the paper-faithful repro (CIFAR-style, CPU scale).
+
+The paper trains VGG-16 / ResNet-18 / ResNet-50 on CIFAR/ImageNet.  This
+container has no datasets and one CPU core, so the repro benchmarks use
+*reduced-width* members of the same families (ResNet-lite with residual
+stages, VGG-lite conv stacks, plus an MLP) on a deterministic synthetic
+image task — the claims being validated are the *relative patterns*
+(Baseline averaged ≈ chance, WASH averaged ≈ ensemble, WASH ≥ PAPA), which
+are scale-transferable, not the absolute CIFAR numbers.
+
+Normalization is GroupNorm: the paper explicitly does not shuffle/recompute
+BatchNorm running statistics, and GN removes that state entirely while
+keeping the architecture family intact (noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifierConfig:
+    kind: str = "resnet"  # resnet | vgg | mlp
+    width: int = 32
+    depth: int = 3  # stages (resnet/vgg) or hidden layers (mlp)
+    num_classes: int = 10
+    image_hw: int = 16
+    in_channels: int = 3
+    groups: int = 4
+
+    @property
+    def num_blocks(self) -> int:
+        return self.depth
+
+
+def _conv_init(key, k, cin, cout):
+    fan = k * k * cin
+    return jax.random.normal(key, (k, k, cin, cout), jnp.float32) * (2.0 / fan) ** 0.5
+
+
+def _dense(key, cin, cout):
+    return {
+        "w": jax.random.normal(key, (cin, cout), jnp.float32) * cin ** -0.5,
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def conv(p, x, stride=1):
+    return jax.lax.conv_general_dilated(
+        x, p, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def groupnorm(p, x, groups):
+    B, H, W, C = x.shape
+    g = min(groups, C)
+    xg = x.reshape(B, H, W, g, C // g)
+    mean = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mean) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(B, H, W, C) * p["scale"] + p["bias"]
+
+
+def _gn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def init_classifier(key, cfg: ClassifierConfig) -> PyTree:
+    ks = jax.random.split(key, cfg.depth + 3)
+    if cfg.kind == "mlp":
+        d_in = cfg.image_hw * cfg.image_hw * cfg.in_channels
+        blocks: List[Any] = []
+        for i in range(cfg.depth):
+            blocks.append(_dense(ks[i + 1], cfg.width, cfg.width))
+        return {
+            "embed": _dense(ks[0], d_in, cfg.width),
+            "blocks": blocks,
+            "head": _dense(ks[-1], cfg.width, cfg.num_classes),
+        }
+
+    w = cfg.width
+    stem = {"conv": _conv_init(ks[0], 3, cfg.in_channels, w), "gn": _gn_init(w)}
+    blocks = []
+    cin = w
+    for i in range(cfg.depth):
+        cout = w * (2 ** i)
+        if cfg.kind == "resnet":
+            blk = {
+                "conv1": _conv_init(jax.random.fold_in(ks[i + 1], 0), 3, cin, cout),
+                "gn1": _gn_init(cout),
+                "conv2": _conv_init(jax.random.fold_in(ks[i + 1], 1), 3, cout, cout),
+                "gn2": _gn_init(cout),
+            }
+            if cin != cout:
+                blk["proj"] = _conv_init(jax.random.fold_in(ks[i + 1], 2), 1, cin, cout)
+        else:  # vgg
+            blk = {
+                "conv1": _conv_init(jax.random.fold_in(ks[i + 1], 0), 3, cin, cout),
+                "gn1": _gn_init(cout),
+            }
+        blocks.append(blk)
+        cin = cout
+    return {
+        "embed": stem,
+        "blocks": blocks,
+        "head": _dense(ks[-1], cin, cfg.num_classes),
+    }
+
+
+def apply_classifier(params, cfg: ClassifierConfig, images) -> jax.Array:
+    """images: (B, H, W, C) float32 -> logits (B, num_classes)."""
+    if cfg.kind == "mlp":
+        x = images.reshape(images.shape[0], -1)
+        x = jax.nn.relu(x @ params["embed"]["w"] + params["embed"]["b"])
+        for blk in params["blocks"]:
+            x = jax.nn.relu(x @ blk["w"] + blk["b"])
+        return x @ params["head"]["w"] + params["head"]["b"]
+
+    x = jax.nn.relu(groupnorm(params["embed"]["gn"], conv(params["embed"]["conv"], images), cfg.groups))
+    for i, blk in enumerate(params["blocks"]):
+        stride = 2 if i > 0 else 1
+        if cfg.kind == "resnet":
+            h = jax.nn.relu(groupnorm(blk["gn1"], conv(blk["conv1"], x, stride), cfg.groups))
+            h = groupnorm(blk["gn2"], conv(blk["conv2"], h), cfg.groups)
+            skip = conv(blk["proj"], x, stride) if "proj" in blk else x
+            x = jax.nn.relu(h + skip)
+        else:
+            x = jax.nn.relu(groupnorm(blk["gn1"], conv(blk["conv1"], x, stride), cfg.groups))
+    x = jnp.mean(x, axis=(1, 2))
+    return x @ params["head"]["w"] + params["head"]["b"]

@@ -1,0 +1,508 @@
+"""Shared neural-net layers: norms, rope, MLPs, GQA + MLA attention.
+
+Everything is a pure function over explicit parameter dicts (no module
+framework — flax is not available here and plain pytrees keep the WASH
+shuffle logic trivial).  Compute-sensitive reductions run in float32.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+NEG_INF = -1e30
+
+
+def param_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    s = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def l2norm(x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    return (xf * jax.lax.rsqrt(jnp.sum(xf * xf, axis=-1, keepdims=True) + eps)).astype(
+        x.dtype
+    )
+
+
+# ---------------------------------------------------------------------------
+# rope
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., T, H, hd); positions: (T,) or (..., T) absolute positions."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)  # (hd/2,)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., :, None] * inv[None, :]  # (..., T, hd/2)
+    cos = jnp.cos(ang)[..., :, None, :]  # (..., T, 1, hd/2)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def swiglu_init(key, d_model, d_ff, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), dtype),
+        "w3": dense_init(k2, (d_model, d_ff), dtype),
+        "w2": dense_init(k3, (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p, x):
+    h = jax.nn.silu(x @ p["w1"]) * (x @ p["w3"])
+    return h @ p["w2"]
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": dense_init(k2, (d_ff, d_model), dtype),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(p, x):
+    return jax.nn.gelu(x @ p["w1"] + p["b1"]) @ p["w2"] + p["b2"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key, cfg: ModelConfig):
+    dtype = param_dtype(cfg)
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads * hd), dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, cfg.d_model), dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["bk"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["bv"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    B, T, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, T, cfg.num_heads, hd)
+    k = k.reshape(B, T, cfg.num_kv_heads, hd)
+    v = v.reshape(B, T, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.pos_kind == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def sdpa(q, k, v, mask, num_kv_heads: int):
+    """q: (B,Tq,H,hd) k/v: (B,Tk,KV,hd); mask: (Tq,Tk) or (B,Tq,Tk) bool."""
+    B, Tq, H, hd = q.shape
+    kv = num_kv_heads
+    g = H // kv
+    qf = q.reshape(B, Tq, kv, g, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("btkgh,bskh->bkgts", qf, kf) / (hd ** 0.5)
+    if mask.ndim == 2:
+        mask = mask[None]
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgts,bskh->btkgh", w, vf)
+    return out.reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def sdpa_chunked(q, k, v, num_kv_heads: int, *, chunk: int, window=None,
+                 bidirectional: bool = False):
+    """Online-softmax attention over kv chunks — never materializes SxS.
+
+    Pure-jnp flash-style formulation (lax.scan over kv chunks with running
+    max/sum), so it lowers through XLA on any backend and is differentiable;
+    the Pallas kernel (repro.kernels.flash_attention) is the TPU-tiled
+    version of the same schedule.  Used when cfg.attn_impl == "chunked".
+    """
+    B, Tq, H, hd = q.shape
+    S = k.shape[1]
+    kv = num_kv_heads
+    g = H // kv
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "pad S to a chunk multiple"
+    qf = q.reshape(B, Tq, kv, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    qpos = jnp.arange(Tq)
+
+    def body(carry, inp):
+        acc, m_prev, l_prev = carry
+        j, k_c, v_c = inp  # chunk idx, (B,chunk,kv,hd) x2
+        scores = jnp.einsum("btkgh,bskh->bkgts", qf, k_c.astype(jnp.float32))
+        kpos = j * chunk + jnp.arange(chunk)
+        mask = jnp.ones((Tq, chunk), bool)
+        if not bidirectional:
+            mask = kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgts,bskh->bkgth", p, v_c.astype(jnp.float32)
+        )
+        return (acc_new, m_new, l_new), None
+
+    n_chunks = S // chunk
+    k_c = k.reshape(B, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    v_c = v.reshape(B, n_chunks, chunk, kv, hd).transpose(1, 0, 2, 3, 4)
+    acc0 = jnp.zeros((B, kv, g, Tq, hd), jnp.float32)
+    m0 = jnp.full((B, kv, g, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, kv, g, Tq), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(
+        body, (acc0, m0, l0), (jnp.arange(n_chunks), k_c, v_c)
+    )
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Tq, H, hd).astype(q.dtype)
+
+
+def sdpa_banded(q, k, v, num_kv_heads: int, *, window: int):
+    """Sliding-window attention in O(S·2W): each W-sized query block attends
+    only to its own and the previous key block (relative mask inside).
+
+    The naive/chunked paths still *compute* S×S (masked) scores; for SWA
+    archs (hymba, the long_500k dense variants) this banded form is the
+    memory-roofline fix — score traffic drops by S/(2W).
+    """
+    B, S, H, hd = q.shape
+    kv = num_kv_heads
+    g = H // kv
+    W = window
+    assert S % W == 0, "pad S to a window multiple"
+    nb = S // W
+    qf = (q.reshape(B, nb, W, kv, g, hd).astype(jnp.float32)) * (hd ** -0.5)
+    kb = k.reshape(B, nb, W, kv, hd).astype(jnp.float32)
+    vb = v.reshape(B, nb, W, kv, hd).astype(jnp.float32)
+    # previous block (zeros before block 0)
+    zeros = jnp.zeros_like(kb[:, :1])
+    k2 = jnp.concatenate([jnp.concatenate([zeros, kb[:, :-1]], 1), kb], axis=2)  # (B,nb,2W,kv,hd)
+    v2 = jnp.concatenate([jnp.concatenate([zeros, vb[:, :-1]], 1), vb], axis=2)
+    scores = jnp.einsum("bntkgh,bnskh->bnkgts", qf, k2)  # (B,nb,kv,g,W,2W)
+    qpos = jnp.arange(W)[:, None]
+    kpos = jnp.arange(2 * W)[None, :] - W
+    rel = qpos - kpos  # how far behind the key is
+    mask = (rel >= 0) & (rel < W)  # causal + window
+    first = jnp.arange(2 * W)[None, :] >= W  # block 0 has no previous block
+    m_all = jnp.broadcast_to(mask[None], (nb, W, 2 * W))
+    m_all = m_all.at[0].set(mask & first)
+    scores = jnp.where(m_all[None, :, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bnkgts,bnskh->bntkgh", w, v2)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def causal_mask(T: int, window: Optional[int] = None):
+    i = jnp.arange(T)[:, None]
+    j = jnp.arange(T)[None, :]
+    m = j <= i
+    if window is not None:
+        m = m & (j > i - window)
+    return m
+
+
+def gqa_train(p, cfg: ModelConfig, x, bidirectional: bool = False):
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    q, k, v = _qkv(p, cfg, x, positions)
+    if cfg.attn_impl == "chunked" and not bidirectional and cfg.window and T % cfg.window == 0 and T > cfg.window:
+        out = sdpa_banded(q, k, v, cfg.num_kv_heads, window=cfg.window)
+    elif cfg.attn_impl == "chunked":
+        out = sdpa_chunked(q, k, v, cfg.num_kv_heads, chunk=min(cfg.attn_chunk, T),
+                           window=cfg.window, bidirectional=bidirectional)
+    else:
+        if bidirectional:
+            mask = jnp.ones((T, T), bool)
+        else:
+            mask = causal_mask(T, cfg.window)
+        out = sdpa(q, k, v, mask, cfg.num_kv_heads)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+# -- KV cache -------------------------------------------------------------
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, capacity: int, num_layers: int):
+    hd = cfg.resolved_head_dim
+    dtype = param_dtype(cfg)
+    return {
+        "k": jnp.zeros((num_layers, batch, capacity, cfg.num_kv_heads, hd), dtype),
+        "v": jnp.zeros((num_layers, batch, capacity, cfg.num_kv_heads, hd), dtype),
+        "pos_ids": jnp.full((num_layers, capacity), -1, jnp.int32),
+    }
+
+
+def gqa_prefill(p, cfg: ModelConfig, x, cache_l):
+    """Full-sequence attention that also fills this layer's cache slice."""
+    B, T, _ = x.shape
+    positions = jnp.arange(T)
+    q, k, v = _qkv(p, cfg, x, positions)
+    cap = cache_l["k"].shape[1]
+    # prefill writes the last `cap` tokens; ring layout slot = pos % cap so
+    # a later decode step can keep appending at (pos % cap).
+    start = max(T - cap, 0)
+    if cap <= T:
+        shift = start % cap
+        cache_l = {
+            "k": jnp.roll(k[:, start:], shift, axis=1).astype(cache_l["k"].dtype),
+            "v": jnp.roll(v[:, start:], shift, axis=1).astype(cache_l["v"].dtype),
+            "pos_ids": jnp.roll(jnp.arange(start, T, dtype=jnp.int32), shift),
+        }
+    else:
+        cache_l = {
+            "k": jax.lax.dynamic_update_slice(
+                cache_l["k"], k.astype(cache_l["k"].dtype), (0, 0, 0, 0)
+            ),
+            "v": jax.lax.dynamic_update_slice(
+                cache_l["v"], v.astype(cache_l["v"].dtype), (0, 0, 0, 0)
+            ),
+            "pos_ids": jax.lax.dynamic_update_slice(
+                cache_l["pos_ids"], jnp.arange(T, dtype=jnp.int32), (0,)
+            ),
+        }
+    if cfg.attn_impl == "chunked" and cfg.window and T % cfg.window == 0 and T > cfg.window:
+        out = sdpa_banded(q, k, v, cfg.num_kv_heads, window=cfg.window)
+    elif cfg.attn_impl == "chunked":
+        out = sdpa_chunked(q, k, v, cfg.num_kv_heads,
+                           chunk=min(cfg.attn_chunk, T), window=cfg.window)
+    else:
+        mask = causal_mask(T, cfg.window)
+        out = sdpa(q, k, v, mask, cfg.num_kv_heads)
+    return out.reshape(B, T, -1) @ p["wo"], cache_l
+
+
+def gqa_decode(p, cfg: ModelConfig, x, cache_l, pos):
+    """One-token decode against this layer's cache slice.
+
+    ``pos`` is the absolute position of the new token.  The cache is a ring
+    of size ``capacity``: full-attention archs use capacity == seq_len;
+    sliding-window archs use capacity == window, giving O(window) decode
+    regardless of logical context length (long_500k path).
+    """
+    B, T, _ = x.shape
+    assert T == 1
+    q, k, v = _qkv(p, cfg, x, jnp.asarray(pos)[None])
+    cap = cache_l["k"].shape[1]
+    slot = jnp.asarray(pos, jnp.int32) % cap
+    ck = jax.lax.dynamic_update_index_in_dim(cache_l["k"], k[:, 0].astype(cache_l["k"].dtype), slot, 1)
+    cv = jax.lax.dynamic_update_index_in_dim(cache_l["v"], v[:, 0].astype(cache_l["v"].dtype), slot, 1)
+    cpos = jax.lax.dynamic_update_index_in_dim(
+        cache_l["pos_ids"], jnp.asarray(pos, jnp.int32), slot, 0
+    )
+    cache_l = {"k": ck, "v": cv, "pos_ids": cpos}
+    valid = cpos >= 0
+    if cfg.window is not None:
+        valid = valid & (cpos > pos - cfg.window)
+    out = sdpa(q, ck, cv, valid[None, :], cfg.num_kv_heads)  # (Tq=1, cap) mask
+    return out.reshape(B, 1, -1) @ p["wo"], cache_l
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+
+def xattn_init(key, cfg: ModelConfig):
+    dtype = param_dtype(cfg)
+    hd = cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.num_heads * hd), dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.num_kv_heads * hd), dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.num_kv_heads * hd), dtype),
+        "wo": dense_init(ks[3], (cfg.num_heads * hd, cfg.d_model), dtype),
+    }
+
+
+def xattn(p, cfg: ModelConfig, x, kv_feats):
+    """kv_feats: encoder output (B, S_enc, D) — no rope, full visibility."""
+    B, T, _ = x.shape
+    S = kv_feats.shape[1]
+    hd = cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, T, cfg.num_heads, hd)
+    k = (kv_feats @ p["wk"]).reshape(B, S, cfg.num_kv_heads, hd)
+    v = (kv_feats @ p["wv"]).reshape(B, S, cfg.num_kv_heads, hd)
+    mask = jnp.ones((T, S), bool)
+    out = sdpa(q, k, v, mask, cfg.num_kv_heads)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V2, arXiv:2405.04434)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key, cfg: ModelConfig):
+    dtype = param_dtype(cfg)
+    H = cfg.num_heads
+    ks = jax.random.split(key, 6)
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq": dense_init(ks[0], (cfg.d_model, H * qd), dtype),
+        "w_dkv": dense_init(ks[1], (cfg.d_model, cfg.kv_lora_rank), dtype),
+        "w_krope": dense_init(ks[2], (cfg.d_model, cfg.qk_rope_dim), dtype),
+        "w_uk": dense_init(ks[3], (cfg.kv_lora_rank, H * cfg.qk_nope_dim), dtype),
+        "w_uv": dense_init(ks[4], (cfg.kv_lora_rank, H * cfg.v_head_dim), dtype),
+        "wo": dense_init(ks[5], (H * cfg.v_head_dim, cfg.d_model), dtype),
+    }
+
+
+def _mla_q(p, cfg: ModelConfig, x, positions):
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    q = (x @ p["wq"]).reshape(B, T, H, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_train(p, cfg: ModelConfig, x):
+    """Training/prefill form: latents expanded to per-head K/V."""
+    B, T, _ = x.shape
+    H = cfg.num_heads
+    positions = jnp.arange(T)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    ckv = x @ p["w_dkv"]  # (B,T,r)
+    krope = apply_rope((x @ p["w_krope"])[:, :, None, :], positions, cfg.rope_theta)
+    k_nope = (ckv @ p["w_uk"]).reshape(B, T, H, cfg.qk_nope_dim)
+    v = (ckv @ p["w_uv"]).reshape(B, T, H, cfg.v_head_dim)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    scores = (
+        jnp.einsum("bthd,bshd->bhts", q_nope.astype(jnp.float32), k_nope.astype(jnp.float32))
+        + jnp.einsum("bthd,bsxd->bhts", q_rope.astype(jnp.float32), krope.astype(jnp.float32))
+    ) * scale
+    mask = causal_mask(T)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", w, v.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(B, T, -1) @ p["wo"]
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, capacity: int, num_layers: int):
+    dtype = param_dtype(cfg)
+    return {
+        "ckv": jnp.zeros((num_layers, batch, capacity, cfg.kv_lora_rank), dtype),
+        "krope": jnp.zeros((num_layers, batch, capacity, cfg.qk_rope_dim), dtype),
+        "pos_ids": jnp.full((num_layers, capacity), -1, jnp.int32),
+    }
+
+
+def mla_prefill(p, cfg: ModelConfig, x, cache_l):
+    B, T, _ = x.shape
+    out = mla_train(p, cfg, x)
+    positions = jnp.arange(T)
+    ckv = x @ p["w_dkv"]
+    krope = apply_rope((x @ p["w_krope"])[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    cache_l = {
+        "ckv": cache_l["ckv"].at[:, :T].set(ckv.astype(cache_l["ckv"].dtype)),
+        "krope": cache_l["krope"].at[:, :T].set(krope.astype(cache_l["krope"].dtype)),
+        "pos_ids": cache_l["pos_ids"].at[:T].set(jnp.arange(T, dtype=jnp.int32)),
+    }
+    return out, cache_l
+
+
+def mla_decode(p, cfg: ModelConfig, x, cache_l, pos):
+    """Absorbed decode: scores/values computed against the *latent* cache.
+
+    q_nope is absorbed through w_uk (q' = q_nope @ w_uk per head) and the
+    attention output is read in latent space then expanded through w_uv —
+    the memory-bandwidth-optimal MLA decode form.
+    """
+    B, T, _ = x.shape
+    assert T == 1
+    H = cfg.num_heads
+    r = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, cfg, x, jnp.asarray(pos)[None])
+    ckv_t = x @ p["w_dkv"]  # (B,1,r)
+    krope_t = apply_rope(
+        (x @ p["w_krope"])[:, :, None, :], jnp.asarray(pos)[None], cfg.rope_theta
+    )[:, :, 0]
+    cap = cache_l["ckv"].shape[1]
+    slot = jnp.asarray(pos, jnp.int32) % cap
+    ckv = jax.lax.dynamic_update_index_in_dim(
+        cache_l["ckv"], ckv_t[:, 0].astype(cache_l["ckv"].dtype), slot, 1
+    )
+    krope = jax.lax.dynamic_update_index_in_dim(
+        cache_l["krope"], krope_t[:, 0].astype(cache_l["krope"].dtype), slot, 1
+    )
+    cpos = jax.lax.dynamic_update_index_in_dim(
+        cache_l["pos_ids"], jnp.asarray(pos, jnp.int32), slot, 0
+    )
+    cache_l = {"ckv": ckv, "krope": krope, "pos_ids": cpos}
+
+    wk = p["w_uk"].reshape(r, H, cfg.qk_nope_dim)
+    q_abs = jnp.einsum("bthd,rhd->bthr", q_nope.astype(jnp.float32), wk.astype(jnp.float32))
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    scores = (
+        jnp.einsum("bthr,bsr->bhts", q_abs, ckv.astype(jnp.float32))
+        + jnp.einsum("bthd,bsd->bhts", q_rope.astype(jnp.float32), krope.astype(jnp.float32))
+    ) * scale
+    valid = cpos >= 0
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhts,bsr->bthr", w, ckv.astype(jnp.float32))  # (B,1,H,r)
+    wv = p["w_uv"].reshape(r, H, cfg.v_head_dim)
+    out = jnp.einsum("bthr,rhd->bthd", lat, wv.astype(jnp.float32)).astype(x.dtype)
+    return out.reshape(B, 1, -1) @ p["wo"], cache_l

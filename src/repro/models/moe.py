@@ -1,0 +1,133 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based sort dispatch.
+
+The dispatch is the GShard/MaxText-style static-capacity formulation:
+tokens are sorted by expert id, each expert processes a fixed-capacity
+buffer, and overflow tokens fall back to the residual path.  Compute
+scales with *active* experts (top_k), so the roofline FLOPs match
+6·N_active·D accounting.
+
+Dispatch operates on G token *groups* (a (G, E, C, D) buffer):
+
+  ``cfg.moe_impl == "global"``  — one group over all B·T tokens (baseline;
+      under pjit the scatter into the expert-sharded buffer crosses the
+      data axis and lowers to giant all-reduces);
+  ``cfg.moe_impl == "grouped"`` — one group per batch row: buffers stay
+      data-local and the expert exchange lowers to all-to-all (§Perf).
+
+``repro.sharding.hints.constrain`` pins the buffer to P(data, model, ·, ·)
+when the launcher activates hints, making the expert einsum fully
+expert-parallel instead of model-axis-replicated.
+
+Shared experts (DeepSeek-V2 / Kimi-K2 style) run densely on every token.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, param_dtype, swiglu, swiglu_init
+from repro.sharding.hints import constrain
+
+
+def moe_init(key, cfg: ModelConfig):
+    dtype = param_dtype(cfg)
+    E, D, F = cfg.n_routed_experts, cfg.d_model, cfg.resolved_moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),
+        "experts": {
+            "w1": dense_init(ks[1], (E, D, F), dtype),
+            "w3": dense_init(ks[2], (E, D, F), dtype),
+            "w2": dense_init(ks[3], (E, F, D), dtype),
+        },
+    }
+    if cfg.n_shared_experts > 0:
+        p["shared"] = swiglu_init(ks[4], D, F * cfg.n_shared_experts, dtype)
+    return p
+
+
+def capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(num_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_routed_experts)
+    return max(8, -(-c // 8) * 8)  # >=8, rounded up to a multiple of 8
+
+
+def moe_apply(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, T, D) -> (out, aux_loss). Residual is added by the caller."""
+    B, T, D = x.shape
+    if cfg.moe_impl == "grouped" and B > 1:
+        xg = x
+    else:
+        xg = x.reshape(1, B * T, D)
+    out, aux = _dispatch_grouped(p, cfg, xg)
+    out = out.reshape(B, T, D)
+    if cfg.n_shared_experts > 0:
+        out = out + swiglu(p["shared"], x.reshape(B * T, D)).reshape(B, T, D)
+    return out, aux
+
+
+def _dispatch_grouped(p, cfg: ModelConfig, x) -> Tuple[jax.Array, jax.Array]:
+    """x: (G, Tg, D) token groups -> (out (G, Tg, D), aux)."""
+    G, Tg, D = x.shape
+    E, K = cfg.n_routed_experts, cfg.top_k
+    C = capacity(cfg, Tg)
+    TK = Tg * K
+    g_idx = jnp.arange(G)[:, None]
+
+    logits = x.astype(jnp.float32) @ p["router"]  # (G, Tg, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_i = jax.lax.top_k(probs, K)  # (G, Tg, K)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # Switch-style load-balance auxiliary loss (over all tokens).
+    me = jnp.mean(probs, axis=(0, 1))
+    ce = jnp.zeros((E,), jnp.float32).at[top_i[..., 0].reshape(-1)].add(
+        1.0 / (G * Tg)
+    )
+    aux = E * jnp.sum(me * ce)
+
+    # flatten (token, slot) assignments and sort by expert id, per group
+    flat_e = top_i.reshape(G, TK)
+    flat_t = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(Tg), K)[None], (G, TK)
+    )
+    flat_w = top_w.reshape(G, TK)
+    order = jnp.argsort(flat_e, axis=1)  # stable
+    se = jnp.take_along_axis(flat_e, order, 1)
+    st = jnp.take_along_axis(flat_t, order, 1)
+    sw = jnp.take_along_axis(flat_w, order, 1)
+
+    counts = jnp.zeros((G, E), jnp.int32).at[g_idx, se].add(1)
+    starts = jnp.concatenate(
+        [jnp.zeros((G, 1), jnp.int32), jnp.cumsum(counts, axis=1)[:, :-1]], axis=1
+    )
+    pos_in_e = jnp.arange(TK)[None] - jnp.take_along_axis(starts, se, 1)
+    keep = pos_in_e < C
+    slot = se * C + jnp.where(keep, pos_in_e, 0)
+
+    xt = jnp.take_along_axis(x, st[..., None], 1)  # (G, TK, D)
+    buf = jnp.zeros((G, E * C, D), x.dtype).at[g_idx, slot].add(
+        jnp.where(keep[..., None], xt, 0).astype(x.dtype)
+    )
+    # two-stage reshard: build data-local (the dispatch scatter never
+    # crosses devices; model-axis replicas build redundant copies, which is
+    # cheap), then slice experts onto the model axis so the expert einsum
+    # is fully expert-parallel.  (A G==chips all-to-all variant was tried
+    # and regressed — see EXPERIMENTS.md §Perf iteration 6.)
+    buf = constrain(buf.reshape(G, E, C, D), "moe_buffer_local")
+    buf = constrain(buf, "moe_buffer")
+
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", buf, p["experts"]["w1"])) * jnp.einsum(
+        "gecd,edf->gecf", buf, p["experts"]["w3"]
+    )
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["experts"]["w2"])
+    out_buf = constrain(constrain(out_buf, "moe_buffer"), "moe_buffer_local")
+    out_buf = out_buf.reshape(G, E * C, D)
+
+    contrib = jnp.take_along_axis(out_buf, slot[..., None], 1)
+    contrib = contrib * (sw * keep)[..., None].astype(x.dtype)
+    out = jnp.zeros((G, Tg, D), x.dtype).at[g_idx, st].add(contrib)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,237 @@
+"""State-space sequence mixers: selective-SSM (Mamba-style, for the Hymba
+hybrid) and RWKV-6 'Finch' (data-dependent decay linear attention).
+
+Both expose a full-sequence form (lax.scan over time) for training /
+prefill and an O(1)-state single-token form for decode — this is what makes
+the ``long_500k`` shape tractable for the ssm/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, param_dtype, rmsnorm, rmsnorm_init
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (arXiv:2312.00752, simplified; used by Hymba)
+# ---------------------------------------------------------------------------
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def mamba_init(key, cfg: ModelConfig):
+    dtype = param_dtype(cfg)
+    D, DI, S = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    R = dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * DI), dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, DI), dtype, scale=0.5),
+        "conv_b": jnp.zeros((DI,), dtype),
+        "x_proj": dense_init(ks[2], (DI, R + 2 * S), dtype),
+        "dt_proj": dense_init(ks[3], (R, DI), dtype),
+        "dt_bias": jnp.full((DI,), -2.0, dtype),  # softplus ~= 0.12
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, S + 1, dtype=jnp.float32), (DI, S))
+        ).astype(jnp.float32),
+        "D": jnp.ones((DI,), jnp.float32),
+        "out_proj": dense_init(ks[4], (DI, D), dtype),
+    }
+
+
+def _mamba_core(p, cfg, u, h0):
+    """u: (B, T, DI) post-conv activations; h0: (B, DI, S) initial state."""
+    S = cfg.ssm_state
+    R = dt_rank(cfg)
+    proj = u @ p["x_proj"]  # (B,T,R+2S)
+    dt_in, Bmat, Cmat = jnp.split(proj, [R, R + S], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"] + p["dt_bias"]).astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])  # (DI, S)
+
+    def step(h, inp):
+        u_t, dt_t, B_t, C_t = inp  # (B,DI) (B,DI) (B,S) (B,S)
+        dA = jnp.exp(dt_t[..., None] * A[None])  # (B,DI,S)
+        dBu = dt_t[..., None] * B_t[:, None, :].astype(jnp.float32) * u_t[..., None].astype(jnp.float32)
+        h = dA * h + dBu
+        y = jnp.einsum("bds,bs->bd", h, C_t.astype(jnp.float32))
+        return h, y
+
+    xs = (
+        jnp.moveaxis(u, 1, 0),
+        jnp.moveaxis(dt, 1, 0),
+        jnp.moveaxis(Bmat, 1, 0),
+        jnp.moveaxis(Cmat, 1, 0),
+    )
+    h, ys = jax.lax.scan(step, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1)  # (B,T,DI)
+    return (y + p["D"][None, None] * u.astype(jnp.float32)).astype(u.dtype), h
+
+
+def mamba_train(p, cfg: ModelConfig, x):
+    out, _, _ = mamba_prefill(p, cfg, x, mamba_state_init(cfg, x.shape[0], 1))
+    return out
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, num_layers: int):
+    DI, S = cfg.d_inner, cfg.ssm_state
+    return {
+        "h": jnp.zeros((num_layers, batch, DI, S), jnp.float32),
+        "conv": jnp.zeros((num_layers, batch, cfg.ssm_conv - 1, DI), param_dtype(cfg)),
+    }
+
+
+def _causal_depthwise_conv(p, cfg, xz, prev):
+    """xz: (B,T,DI); prev: (B, k-1, DI) left context. Returns (out, new_prev)."""
+    k = cfg.ssm_conv
+    padded = jnp.concatenate([prev.astype(xz.dtype), xz], axis=1)  # (B,T+k-1,DI)
+    T = xz.shape[1]
+    out = jnp.zeros_like(xz)
+    for i in range(k):
+        out = out + padded[:, i : i + T] * p["conv_w"][i][None, None]
+    new_prev = padded[:, -(k - 1) :] if k > 1 else prev
+    return out + p["conv_b"][None, None], new_prev
+
+
+def mamba_prefill(p, cfg: ModelConfig, x, state_l):
+    """x: (B,T,D) -> (out, new_state). state_l: per-layer slice."""
+    DI = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, [DI], axis=-1)
+    u, conv_prev = _causal_depthwise_conv(p, cfg, xs, state_l["conv"])
+    u = jax.nn.silu(u)
+    y, h = _mamba_core(p, cfg, u, state_l["h"])
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"h": h, "conv": conv_prev}
+
+
+def mamba_decode(p, cfg: ModelConfig, x, state_l):
+    """x: (B,1,D) single-token decode with O(1) state."""
+    DI = cfg.d_inner
+    xz = x @ p["in_proj"]
+    xs, z = jnp.split(xz, [DI], axis=-1)
+    hist = jnp.concatenate([state_l["conv"].astype(xs.dtype), xs], axis=1)  # (B,k,DI)
+    u = jnp.einsum("bkd,kd->bd", hist, p["conv_w"]) + p["conv_b"]
+    u = jax.nn.silu(u)[:, None]  # (B,1,DI)
+    y, h = _mamba_core(p, cfg, u, state_l["h"])
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, {"h": h, "conv": hist[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 "Finch" (arXiv:2404.05892) — data-dependent decay linear attention
+# ---------------------------------------------------------------------------
+
+
+def rwkv_heads(cfg: ModelConfig) -> int:
+    assert cfg.d_model % cfg.rwkv_head_dim == 0
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv6_init(key, cfg: ModelConfig):
+    dtype = param_dtype(cfg)
+    D = cfg.d_model
+    F = cfg.d_ff
+    H, hd = rwkv_heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(key, 12)
+    lora = 32
+    return {
+        "tm": {  # time mix
+            "mu": 0.5 * jnp.ones((5, D), dtype),  # static token-shift mix r,k,v,w,g
+            "w0": jnp.zeros((D,), jnp.float32),  # decay base
+            "w_lora_a": dense_init(ks[0], (D, lora), dtype),
+            "w_lora_b": dense_init(ks[1], (lora, D), dtype, scale=0.01),
+            "wr": dense_init(ks[2], (D, D), dtype),
+            "wk": dense_init(ks[3], (D, D), dtype),
+            "wv": dense_init(ks[4], (D, D), dtype),
+            "wg": dense_init(ks[5], (D, D), dtype),
+            "wo": dense_init(ks[6], (D, D), dtype),
+            "u": jnp.zeros((H, hd), jnp.float32),  # per-head bonus
+            "ln": rmsnorm_init(D, dtype),
+        },
+        "cm": {  # channel mix
+            "mu": 0.5 * jnp.ones((2, D), dtype),  # k, r shifts
+            "wk": dense_init(ks[7], (D, F), dtype),
+            "wv": dense_init(ks[8], (F, D), dtype),
+            "wr": dense_init(ks[9], (D, D), dtype),
+        },
+    }
+
+
+def rwkv_state_init(cfg: ModelConfig, batch: int, num_layers: int):
+    H, hd = rwkv_heads(cfg), cfg.rwkv_head_dim
+    D = cfg.d_model
+    dtype = param_dtype(cfg)
+    return {
+        "S": jnp.zeros((num_layers, batch, H, hd, hd), jnp.float32),
+        "x_tm": jnp.zeros((num_layers, batch, D), dtype),
+        "x_cm": jnp.zeros((num_layers, batch, D), dtype),
+    }
+
+
+def _token_shift(x, prev):
+    """x: (B,T,D), prev: (B,D) -> x shifted right by one with prev injected."""
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def _rwkv_time_mix(p, cfg, x, S0, x_prev):
+    B, T, D = x.shape
+    H, hd = rwkv_heads(cfg), cfg.rwkv_head_dim
+    xs = _token_shift(x, x_prev)
+    mu = p["mu"]
+    xr = x + (xs - x) * mu[0][None, None]
+    xk = x + (xs - x) * mu[1][None, None]
+    xv = x + (xs - x) * mu[2][None, None]
+    xw = x + (xs - x) * mu[3][None, None]
+    xg = x + (xs - x) * mu[4][None, None]
+
+    r = (xr @ p["wr"]).reshape(B, T, H, hd).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, T, H, hd).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, T, H, hd).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"])
+    # data-dependent decay (the RWKV6 signature): w in (0,1) per channel/step
+    w_dd = p["w0"][None, None] + (jax.nn.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(w_dd)).reshape(B, T, H, hd)
+    u = p["u"]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # each (B,H,hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    xs_scan = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    S, ys = jax.lax.scan(step, S0, xs_scan)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, T, D).astype(x.dtype)
+    y = rmsnorm(p["ln"], y, cfg.norm_eps) * g
+    return y @ p["wo"], S, x[:, -1]
+
+
+def _rwkv_channel_mix(p, x, x_prev):
+    xs = _token_shift(x, x_prev)
+    xk = x + (xs - x) * p["mu"][0][None, None]
+    xr = x + (xs - x) * p["mu"][1][None, None]
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    return jax.nn.sigmoid(xr @ p["wr"]) * (k @ p["wv"]), x[:, -1]
+
+
+def rwkv6_block(p, cfg: ModelConfig, x, state_l, norms):
+    """Full RWKV block: time-mix + channel-mix with pre-norms.
+
+    ``norms``: dict with ln1/ln2 rmsnorm params (owned by the block).
+    Returns (x_out, new_state_l).
+    """
+    h = rmsnorm(norms["ln1"], x, cfg.norm_eps)
+    y, S, x_tm = _rwkv_time_mix(p["tm"], cfg, h, state_l["S"], state_l["x_tm"])
+    x = x + y
+    h = rmsnorm(norms["ln2"], x, cfg.norm_eps)
+    y, x_cm = _rwkv_channel_mix(p["cm"], h, state_l["x_cm"])
+    x = x + y
+    return x, {"S": S, "x_tm": x_tm, "x_cm": x_cm}

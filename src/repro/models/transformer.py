@@ -1,0 +1,408 @@
+"""Model assembly: init / train-loss / prefill / decode for every family.
+
+Blocks are *scanned*: all layer parameters are stacked along a leading
+``num_layers`` axis under ``params["blocks"]`` (and ``params["enc_blocks"]``
+for encoder–decoder models).  This keeps HLO size O(1) in depth — required
+for the 61/80-layer dry-runs — and the WASH layer-wise schedule stays exact
+via the layered plans in ``repro.core.shuffle``.
+
+Batch dicts:
+  dense/moe/ssm/hybrid : {"tokens": (B,S) int32}
+  vlm                  : + {"patches": (B,P,D)}        (stubbed ViT output)
+  audio (whisper)      : + {"frames": (B,F,D)}          (stubbed conv/mel output)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as MOE
+from repro.models import ssm as SSM
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _mlp_init(key, cfg: ModelConfig):
+    if cfg.moe:
+        return MOE.moe_init(key, cfg)
+    return L.swiglu_init(key, cfg.d_model, cfg.d_ff, L.param_dtype(cfg))
+
+
+def _block_init(key, cfg: ModelConfig):
+    dtype = L.param_dtype(cfg)
+    ks = jax.random.split(key, 4)
+    D = cfg.d_model
+    if cfg.block_kind == "rwkv6":
+        return {
+            "ln1": L.rmsnorm_init(D, dtype),
+            "ln2": L.rmsnorm_init(D, dtype),
+            "rwkv": SSM.rwkv6_init(ks[0], cfg),
+        }
+    p = {
+        "ln1": L.rmsnorm_init(D, dtype),
+        "ln2": L.rmsnorm_init(D, dtype),
+        "mlp": _mlp_init(ks[1], cfg),
+    }
+    if cfg.mla:
+        p["attn"] = L.mla_init(ks[0], cfg)
+    else:
+        p["attn"] = L.gqa_init(ks[0], cfg)
+    if cfg.block_kind == "hybrid":
+        p["mamba"] = SSM.mamba_init(ks[2], cfg)
+        p["beta"] = jnp.ones((2,), jnp.float32)  # learned attn/ssm fusion
+    return p
+
+
+def _enc_block_init(key, cfg: ModelConfig):
+    dtype = L.param_dtype(cfg)
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.gqa_init(ks[0], cfg),
+        "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+        "mlp": L.gelu_mlp_init(ks[1], cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _dec_block_init(key, cfg: ModelConfig):
+    p = _block_init(key, cfg)
+    p["xattn"] = L.xattn_init(jax.random.fold_in(key, 99), cfg)
+    p["ln_x"] = L.rmsnorm_init(cfg.d_model, L.param_dtype(cfg))
+    return p
+
+
+def init_params(key, cfg: ModelConfig) -> PyTree:
+    dtype = L.param_dtype(cfg)
+    ks = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab_size
+    params: Dict[str, Any] = {
+        "embed": {"tok": L.dense_init(ks[0], (V, D), dtype, scale=0.02)},
+        "final_norm": L.rmsnorm_init(D, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {"w": L.dense_init(ks[1], (D, V), dtype)}
+    if cfg.pos_kind == "learned":
+        params["embed"]["pos"] = L.dense_init(
+            ks[2], (cfg.max_position, D), dtype, scale=0.02
+        )
+    if cfg.frontend == "vision":
+        params["embed"]["patch_proj"] = L.dense_init(ks[3], (D, D), dtype)
+    if cfg.frontend == "audio":
+        params["embed"]["frame_proj"] = L.dense_init(ks[3], (D, D), dtype)
+        params["embed"]["enc_pos"] = L.dense_init(
+            ks[4], (cfg.num_frames, D), dtype, scale=0.02
+        )
+
+    block_init = _dec_block_init if cfg.is_encdec else _block_init
+    bkeys = jax.random.split(ks[5], cfg.num_layers)
+    params["blocks"] = jax.vmap(lambda k: block_init(k, cfg))(bkeys)
+    if cfg.is_encdec:
+        ekeys = jax.random.split(ks[6], cfg.encoder_layers)
+        params["enc_blocks"] = jax.vmap(lambda k: _enc_block_init(k, cfg))(ekeys)
+        params["enc_norm"] = L.rmsnorm_init(D, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _mlp_apply(p, cfg: ModelConfig, x):
+    if cfg.moe:
+        return MOE.moe_apply(p, cfg, x)
+    return L.swiglu(p, x), jnp.zeros((), jnp.float32)
+
+
+def _block_train(p, cfg: ModelConfig, x, state_l=None):
+    """Returns (x, new_state_l, aux)."""
+    if cfg.block_kind == "rwkv6":
+        x, new_state = SSM.rwkv6_block(
+            p["rwkv"], cfg, x, state_l, {"ln1": p["ln1"], "ln2": p["ln2"]}
+        )
+        return x, new_state, jnp.zeros((), jnp.float32)
+
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a = L.mla_train(p["attn"], cfg, h)
+    else:
+        a = L.gqa_train(p["attn"], cfg, h)
+    if cfg.block_kind == "hybrid":
+        m, new_ssm = SSM.mamba_prefill(p["mamba"], cfg, h, state_l)
+        beta = jax.nn.softmax(p["beta"]).astype(a.dtype)
+        a = beta[0] * a + beta[1] * m
+    else:
+        new_ssm = state_l
+    x = x + a
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    y, aux = _mlp_apply(p["mlp"], cfg, h)
+    return x + y, new_ssm, aux
+
+
+def _run_blocks_train(params, cfg: ModelConfig, x):
+    """Scan all decoder-only blocks over the stacked layer axis."""
+    B = x.shape[0]
+    if cfg.block_kind == "rwkv6":
+        init_state = SSM.rwkv_state_init(cfg, B, cfg.num_layers)
+    elif cfg.block_kind == "hybrid":
+        init_state = SSM.mamba_state_init(cfg, B, cfg.num_layers)
+    else:
+        init_state = None
+
+    def body(carry, xs):
+        h = carry
+        if init_state is None:
+            block_l = xs
+            h, _, aux = _block_train(block_l, cfg, h, None)
+        else:
+            block_l, state_l = xs
+            h, _, aux = _block_train(block_l, cfg, h, state_l)
+        return h, aux
+
+    if cfg.remat_blocks:
+        body = jax.checkpoint(body)
+    xs = params["blocks"] if init_state is None else (params["blocks"], init_state)
+    x, auxs = jax.lax.scan(body, x, xs, unroll=cfg.scan_unroll)
+    return x, jnp.sum(auxs)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / logits
+# ---------------------------------------------------------------------------
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, pos0: int = 0):
+    x = params["embed"]["tok"][tokens]
+    if cfg.pos_kind == "learned":
+        T = tokens.shape[1]
+        pos = jax.lax.dynamic_slice_in_dim(params["embed"]["pos"], pos0, T, 0)
+        x = x + pos[None]
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return x @ params["embed"]["tok"].T
+    return x @ params["lm_head"]["w"]
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper-style encoder over stubbed frame embeddings (B,F,D)."""
+    x = frames @ params["embed"]["frame_proj"] + params["embed"]["enc_pos"][None]
+
+    def body(h, block_l):
+        a = L.gqa_train(
+            block_l["attn"], cfg, L.rmsnorm(block_l["ln1"], h, cfg.norm_eps),
+            bidirectional=True,
+        )
+        h = h + a
+        y = L.gelu_mlp(block_l["mlp"], L.rmsnorm(block_l["ln2"], h, cfg.norm_eps))
+        return h + y, None
+
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"], unroll=cfg.scan_unroll)
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def _run_dec_blocks_train(params, cfg: ModelConfig, x, enc_out):
+    def body(h, block_l):
+        a = L.gqa_train(block_l["attn"], cfg, L.rmsnorm(block_l["ln1"], h, cfg.norm_eps))
+        h = h + a
+        c = L.xattn(block_l["xattn"], cfg, L.rmsnorm(block_l["ln_x"], h, cfg.norm_eps), enc_out)
+        h = h + c
+        y, _ = _mlp_apply(block_l["mlp"], cfg, L.rmsnorm(block_l["ln2"], h, cfg.norm_eps))
+        return h + y, None
+
+    x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# public API: train / eval
+# ---------------------------------------------------------------------------
+
+
+def forward_logits(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence logits (B,S,V) over the *text* positions + aux loss."""
+    tokens = batch["tokens"]
+    aux = jnp.zeros((), jnp.float32)
+
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, batch["frames"])
+        x = _embed_tokens(params, cfg, tokens)
+        x = _run_dec_blocks_train(params, cfg, x, enc_out)
+        return _logits(params, cfg, x), aux
+
+    x = _embed_tokens(params, cfg, tokens)
+    n_prefix = 0
+    if cfg.frontend == "vision":
+        patches = batch["patches"] @ params["embed"]["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        n_prefix = patches.shape[1]
+    x, aux = _run_blocks_train(params, cfg, x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    return _logits(params, cfg, x), aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Next-token cross entropy (+ router aux loss for MoE)."""
+    logits, aux = forward_logits(params, cfg, batch)
+    targets = batch["tokens"][:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0]
+    loss = jnp.mean(nll)
+    total = loss + cfg.router_aux_coef * aux
+    return total, {"nll": loss, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# public API: serving (prefill + one-token decode)
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int) -> PyTree:
+    """Decode-state pytree.  ``capacity`` = logical context; sliding-window
+    archs allocate only ``min(window, capacity)`` KV slots."""
+    cache: Dict[str, Any] = {}
+    Lc = cfg.num_layers
+    if cfg.block_kind == "rwkv6":
+        cache["state"] = SSM.rwkv_state_init(cfg, batch, Lc)
+        return cache
+    cap = capacity if cfg.window is None else min(cfg.window, capacity)
+    if cfg.mla:
+        cache["kv"] = L.mla_cache_init(cfg, batch, cap, Lc)
+    else:
+        cache["kv"] = L.gqa_cache_init(cfg, batch, cap, Lc)
+    if cfg.block_kind == "hybrid":
+        cache["ssm"] = SSM.mamba_state_init(cfg, batch, Lc)
+    if cfg.is_encdec:
+        hd = cfg.resolved_head_dim
+        dt = L.param_dtype(cfg)
+        cache["xk"] = jnp.zeros((Lc, batch, cfg.num_frames, cfg.num_kv_heads, hd), dt)
+        cache["xv"] = jnp.zeros((Lc, batch, cfg.num_frames, cfg.num_kv_heads, hd), dt)
+    return cache
+
+
+def _block_decode(block_l, cfg: ModelConfig, x, cache_l, pos):
+    """One-token decode for one (scanned) layer. Returns (x, new_cache_l)."""
+    new_cache = dict(cache_l)
+    if cfg.block_kind == "rwkv6":
+        x, new_state = SSM.rwkv6_block(
+            block_l["rwkv"], cfg, x, cache_l["state"],
+            {"ln1": block_l["ln1"], "ln2": block_l["ln2"]},
+        )
+        new_cache["state"] = new_state
+        return x, new_cache
+
+    h = L.rmsnorm(block_l["ln1"], x, cfg.norm_eps)
+    if cfg.mla:
+        a, new_cache["kv"] = L.mla_decode(block_l["attn"], cfg, h, cache_l["kv"], pos)
+    else:
+        a, new_cache["kv"] = L.gqa_decode(block_l["attn"], cfg, h, cache_l["kv"], pos)
+    if cfg.block_kind == "hybrid":
+        m, new_cache["ssm"] = SSM.mamba_decode(block_l["mamba"], cfg, h, cache_l["ssm"])
+        beta = jax.nn.softmax(block_l["beta"]).astype(a.dtype)
+        a = beta[0] * a + beta[1] * m
+    x = x + a
+    if cfg.is_encdec:
+        hx = L.rmsnorm(block_l["ln_x"], x, cfg.norm_eps)
+        B = x.shape[0]
+        hd = cfg.resolved_head_dim
+        q = (hx @ block_l["xattn"]["wq"]).reshape(B, 1, cfg.num_heads, hd)
+        mask = jnp.ones((1, cache_l["xk"].shape[1]), bool)
+        c = L.sdpa(q, cache_l["xk"], cache_l["xv"], mask, cfg.num_kv_heads)
+        x = x + c.reshape(B, 1, -1) @ block_l["xattn"]["wo"]
+    h = L.rmsnorm(block_l["ln2"], x, cfg.norm_eps)
+    y, _ = _mlp_apply(block_l["mlp"], cfg, h)
+    return x + y, new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
+    """serve_step: ONE new token (B,1) against the cache at position ``pos``."""
+    x = _embed_tokens(params, cfg, tokens, pos0=pos) if cfg.pos_kind == "learned" else (
+        params["embed"]["tok"][tokens]
+    )
+
+    def body(h, xs):
+        block_l, cache_l = xs
+        h, new_cache_l = _block_decode(block_l, cfg, h, cache_l, pos)
+        return h, new_cache_l
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache), unroll=cfg.scan_unroll)
+    return _logits(params, cfg, x), new_cache
+
+
+def prefill(params, cfg: ModelConfig, batch, capacity: Optional[int] = None):
+    """Process the full prompt, returning (last-token logits, filled cache)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    cap = capacity or T
+    cache = init_cache(cfg, B, cap)
+
+    if cfg.block_kind == "rwkv6":
+        x = _embed_tokens(params, cfg, tokens)
+
+        def body(h, xs):
+            block_l, state_l = xs
+            h, new_state = SSM.rwkv6_block(
+                block_l["rwkv"], cfg, h, state_l,
+                {"ln1": block_l["ln1"], "ln2": block_l["ln2"]},
+            )
+            return h, new_state
+
+        x, new_state = jax.lax.scan(body, x, (params["blocks"], cache["state"]), unroll=cfg.scan_unroll)
+        return _logits(params, cfg, x[:, -1:]), {"state": new_state}
+
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(params, cfg, batch["frames"])
+        hd = cfg.resolved_head_dim
+        S = enc_out.shape[1]
+
+    x = _embed_tokens(params, cfg, tokens)
+    n_prefix = 0
+    if cfg.frontend == "vision":
+        patches = batch["patches"] @ params["embed"]["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        n_prefix = patches.shape[1]
+
+    def body(h, xs):
+        block_l, cache_l = xs
+        new_cache_l = dict(cache_l)
+        a_in = L.rmsnorm(block_l["ln1"], h, cfg.norm_eps)
+        if cfg.mla:
+            a, new_cache_l["kv"] = L.mla_prefill(block_l["attn"], cfg, a_in, cache_l["kv"])
+        else:
+            a, new_cache_l["kv"] = L.gqa_prefill(block_l["attn"], cfg, a_in, cache_l["kv"])
+        if cfg.block_kind == "hybrid":
+            m, new_cache_l["ssm"] = SSM.mamba_prefill(block_l["mamba"], cfg, a_in, cache_l["ssm"])
+            beta = jax.nn.softmax(block_l["beta"]).astype(a.dtype)
+            a = beta[0] * a + beta[1] * m
+        h = h + a
+        if cfg.is_encdec:
+            hx = L.rmsnorm(block_l["ln_x"], h, cfg.norm_eps)
+            c = L.xattn(block_l["xattn"], cfg, hx, enc_out)
+            h = h + c
+            B_, = (h.shape[0],)
+            new_cache_l["xk"] = (enc_out @ block_l["xattn"]["wk"]).reshape(
+                B_, S, cfg.num_kv_heads, hd
+            ).astype(cache_l["xk"].dtype)
+            new_cache_l["xv"] = (enc_out @ block_l["xattn"]["wv"]).reshape(
+                B_, S, cfg.num_kv_heads, hd
+            ).astype(cache_l["xv"].dtype)
+        y, _ = _mlp_apply(block_l["mlp"], cfg, L.rmsnorm(block_l["ln2"], h, cfg.norm_eps))
+        return h + y, new_cache_l
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache), unroll=cfg.scan_unroll)
+    return _logits(params, cfg, x[:, -1:]), new_cache

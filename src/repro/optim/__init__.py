@@ -1,0 +1,24 @@
+"""Optimizers built from scratch (no optax in this container).
+
+State layout is a dict {"mu": pytree, ["nu": pytree], "step": scalar} —
+``mu``/``nu`` mirror the parameter structure so WASH+Opt can replay the
+parameter shuffle plan on them verbatim (see repro.core.mixing).
+"""
+
+from repro.optim.optimizers import (
+    adamw_init,
+    adamw_update,
+    cosine_lr,
+    make_optimizer,
+    sgd_init,
+    sgd_update,
+)
+
+__all__ = [
+    "sgd_init",
+    "sgd_update",
+    "adamw_init",
+    "adamw_update",
+    "cosine_lr",
+    "make_optimizer",
+]

@@ -1,0 +1,122 @@
+"""SGD+momentum (the paper's optimizer) and AdamW, plus cosine annealing."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _zeros_like_f32(tree: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32), tree)
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum + decoupled weight decay (paper §4: SGD, momentum, wd 1e-4)
+# ---------------------------------------------------------------------------
+
+
+def sgd_init(params: PyTree) -> dict:
+    return {"mu": _zeros_like_f32(params), "step": jnp.zeros((), jnp.int32)}
+
+
+def sgd_update(
+    params: PyTree,
+    grads: PyTree,
+    state: dict,
+    lr,
+    momentum: float = 0.9,
+    weight_decay: float = 1e-4,
+) -> Tuple[PyTree, dict]:
+    def upd(p, g, m):
+        gf = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m = momentum * m + gf
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(state["mu"])[0]
+    new = [upd(p, g, m) for p, g, m in zip(flat_p, flat_g, flat_m)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [a for a, _ in new])
+    new_m = jax.tree_util.tree_unflatten(treedef, [b for _, b in new])
+    return new_p, {"mu": new_m, "step": state["step"] + 1}
+
+
+# ---------------------------------------------------------------------------
+# AdamW (for the LLM examples; WASH+Opt shuffles both moments)
+# ---------------------------------------------------------------------------
+
+
+def adamw_init(params: PyTree) -> dict:
+    return {
+        "mu": _zeros_like_f32(params),
+        "nu": _zeros_like_f32(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_update(
+    params: PyTree,
+    grads: PyTree,
+    state: dict,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+) -> Tuple[PyTree, dict]:
+    step = state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * gf
+        v = b2 * v + (1 - b2) * gf * gf
+        update = (m / c1) / (jnp.sqrt(v / c2) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(state["mu"])[0]
+    flat_v = jax.tree_util.tree_flatten(state["nu"])[0]
+    new = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    return (
+        jax.tree_util.tree_unflatten(treedef, [a for a, _, _ in new]),
+        {
+            "mu": jax.tree_util.tree_unflatten(treedef, [b for _, b, _ in new]),
+            "nu": jax.tree_util.tree_unflatten(treedef, [c for _, _, c in new]),
+            "step": step,
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# schedules / factory
+# ---------------------------------------------------------------------------
+
+
+def cosine_lr(step, total_steps: int, base_lr: float, min_lr: float, warmup: int = 0):
+    """Cosine annealing with optional linear warmup (paper: 0.1 -> 1e-4)."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    frac = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+    cos = min_lr + 0.5 * (base_lr - min_lr) * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def make_optimizer(name: str, **kw) -> Tuple[Callable, Callable]:
+    if name == "sgd":
+        return sgd_init, lambda p, g, s, lr: sgd_update(
+            p, g, s, lr,
+            momentum=kw.get("momentum", 0.9),
+            weight_decay=kw.get("weight_decay", 1e-4),
+        )
+    if name == "adamw":
+        return adamw_init, lambda p, g, s, lr: adamw_update(
+            p, g, s, lr, weight_decay=kw.get("weight_decay", 0.1)
+        )
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,5 @@
+"""Serving: batched generation engine over prefill/decode."""
+
+from repro.serving.engine import generate, internal_prefix
+
+__all__ = ["generate", "internal_prefix"]

@@ -1,0 +1,61 @@
+"""Batched greedy/temperature generation on top of prefill + decode_step.
+
+Handles the position bookkeeping for multimodal prefixes (VLM patches are
+part of the internal sequence, so decode positions are offset by
+``num_patches``).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as M
+
+PyTree = Any
+
+
+def internal_prefix(cfg: ModelConfig) -> int:
+    return cfg.num_patches if cfg.frontend == "vision" else 0
+
+
+def generate(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    max_new_tokens: int,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """batch: {"tokens": (B,S), ["patches"|"frames"]: ...} -> (B, S+max_new)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    prefix = internal_prefix(cfg)
+    capacity = prefix + S + max_new_tokens
+
+    logits, cache = M.prefill(params, cfg, batch, capacity=capacity)
+
+    def sample(lg, k):
+        if temperature <= 0.0:
+            return jnp.argmax(lg[:, -1], axis=-1)
+        return jax.random.categorical(k, lg[:, -1] / temperature)
+
+    decode = jax.jit(
+        lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos)
+    )
+
+    out = [tokens]
+    k = key if key is not None else jax.random.key(0)
+    nxt = sample(logits, k)
+    for i in range(max_new_tokens):
+        out.append(nxt[:, None])
+        if i == max_new_tokens - 1:
+            break
+        pos = prefix + S + i
+        logits, cache = decode(params, nxt[:, None], cache, pos)
+        k = jax.random.fold_in(k, i)
+        nxt = sample(logits, k)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,6 @@
+"""Population training loop + checkpointing."""
+
+from repro.train.loop import TrainResult, train_population
+from repro.train import checkpoint
+
+__all__ = ["train_population", "TrainResult", "checkpoint"]

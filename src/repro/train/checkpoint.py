@@ -1,0 +1,41 @@
+"""Minimal npz checkpointing for pytrees (no orbax in this container)."""
+
+from __future__ import annotations
+
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "::"
+
+
+def _flat_paths(tree: PyTree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(path: str, tree: PyTree) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    np.savez(path, **_flat_paths(tree))
+
+
+def restore(path: str, like: PyTree) -> PyTree:
+    """Restore into the structure of ``like`` (shapes must match)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for p, leaf in flat:
+        key = _SEP.join(str(q.key) if hasattr(q, "key") else str(q.idx) for q in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

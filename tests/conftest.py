@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Smoke tests and benches see the single real CPU device; only the dry-run
+# (a separate process) forces 512 placeholder devices via XLA_FLAGS.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)

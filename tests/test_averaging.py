@@ -1,0 +1,56 @@
+"""Soups, ensembles, interpolation (paper §4 evaluation strategies)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import averaging as avg
+from repro.core import population as pop
+
+
+def _toy_linear_population(n=4):
+    key = jax.random.key(0)
+    ws = jax.random.normal(key, (n, 5, 3))
+    return {"head": {"w": ws}}
+
+
+def _apply(params, x):
+    return x @ params["head"]["w"]
+
+
+def test_uniform_soup_is_mean():
+    p = _toy_linear_population()
+    soup = avg.uniform_soup(p)
+    np.testing.assert_allclose(
+        np.asarray(soup["head"]["w"]), np.asarray(p["head"]["w"]).mean(0), rtol=1e-6
+    )
+
+
+def test_interpolate_weights():
+    p = _toy_linear_population(3)
+    w = jnp.asarray([1.0, 0.0, 0.0])
+    m = avg.interpolate(p, w)
+    np.testing.assert_allclose(
+        np.asarray(m["head"]["w"]), np.asarray(p["head"]["w"])[0], rtol=1e-6
+    )
+
+
+def test_ensemble_beats_or_matches_members_on_average_prob():
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (64, 5))
+    p = _toy_linear_population(4)
+    labels = jnp.argmax(_apply(pop.member(p, 0), x), axis=-1)
+    accs = avg.member_accuracies(_apply, p, x, labels)
+    ens = avg.ensemble_accuracy(_apply, p, x, labels)
+    assert float(ens) >= float(jnp.min(accs)) - 1e-6
+
+
+def test_greedy_soup_at_least_best_member():
+    key = jax.random.key(2)
+    x = jax.random.normal(key, (128, 5))
+    p = _toy_linear_population(5)
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (128,), 0, 3)
+    best = float(jnp.max(avg.member_accuracies(_apply, p, x, labels)))
+    gs = avg.greedy_soup(_apply, p, x, labels)
+    acc = float(avg.model_accuracy(_apply, gs, x, labels))
+    assert acc >= best - 1e-6

@@ -1,0 +1,131 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(0)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# wash_shuffle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n,d,block_d", [(2, 100, 64), (5, 3000, 512), (8, 513, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_wash_shuffle_kernel(n, d, block_d, dtype):
+    x = jax.random.normal(KEY, (n, d)).astype(dtype)
+    u = jax.random.uniform(jax.random.fold_in(KEY, 1), (n, d))
+    perm = jnp.argsort(u, axis=0).astype(jnp.int32)
+    mask = jax.random.bernoulli(jax.random.fold_in(KEY, 2), 0.4, (d,))
+    out = ops.wash_shuffle(x, perm, mask, block_d=block_d)
+    expect = ref.wash_shuffle_ref(x, perm, mask)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "B,S,H,KV,hd,bq,bk",
+    [(1, 64, 4, 4, 16, 16, 16),   # MHA
+     (2, 128, 4, 2, 32, 32, 64),  # GQA, uneven blocks
+     (1, 96, 8, 1, 16, 32, 32)],  # MQA
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_causal(B, S, H, KV, hd, bq, bk, dtype):
+    q = jax.random.normal(KEY, (B, S, H, hd)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, hd)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd)).astype(dtype)
+    out = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), **_tol(dtype)
+    )
+
+
+@pytest.mark.parametrize("window", [8, 32])
+def test_flash_attention_sliding_window(window):
+    B, S, H, KV, hd = 1, 64, 4, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd))
+    out = ops.flash_attention(q, k, v, window=window, block_q=16, block_k=16)
+    expect = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_noncausal():
+    B, S, H, KV, hd = 1, 32, 2, 2, 16
+    q = jax.random.normal(KEY, (B, S, H, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (B, S, KV, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (B, S, KV, hd))
+    out = ops.flash_attention(q, k, v, causal=False, block_q=16, block_k=16)
+    expect = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6_scan
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,T,H,hd,chunk", [(1, 32, 2, 8, 8), (2, 64, 2, 16, 16)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rwkv6_scan_kernel(B, T, H, hd, chunk, dtype):
+    ks = [jax.random.fold_in(KEY, i) for i in range(5)]
+    r = jax.random.normal(ks[0], (B, T, H, hd)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, H, hd)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, H, hd)).astype(dtype)
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd))).astype(dtype)
+    u = (jax.random.normal(ks[4], (H, hd)) * 0.1).astype(jnp.float32)
+    out = ops.rwkv6_scan(r, k, v, w, u, chunk=chunk)
+    expect = ref.rwkv6_scan_ref(r, k, v, w, u)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 1e-4,
+        atol=3e-1 if dtype == jnp.bfloat16 else 1e-4,
+    )
+
+
+def test_rwkv6_kernel_matches_model_time_mix():
+    """The kernel computes the same recurrence the model's scan uses."""
+    from repro.models import ssm as SSM
+    from repro.configs.base import ModelConfig
+
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=50, block_kind="rwkv6",
+                      rwkv_head_dim=16, dtype="float32")
+    B, T, H, hd = 2, 24, 2, 16
+    ks = [jax.random.fold_in(KEY, i) for i in range(5)]
+    r = jax.random.normal(ks[0], (B, T, H, hd))
+    k = jax.random.normal(ks[1], (B, T, H, hd))
+    v = jax.random.normal(ks[2], (B, T, H, hd))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd)))
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+
+    y_kernel = ops.rwkv6_scan(r, k, v, w, u, chunk=8)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp
+        kv = jnp.einsum("bhk,bhv->bhkv", k_t, v_t)
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+    _, ys = jax.lax.scan(step, jnp.zeros((B, H, hd, hd)), xs)
+    y_model = jnp.moveaxis(ys, 0, 1)
+    np.testing.assert_allclose(
+        np.asarray(y_kernel), np.asarray(y_model), rtol=1e-4, atol=1e-4
+    )

@@ -1,0 +1,111 @@
+"""Mixing strategies: WASH vs PAPA vs PAPA-all contraction behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import population as pop
+from repro.core.consensus import consensus, sq_distance_to_consensus
+from repro.core.layer_index import infer_layer_ids, total_layers
+from repro.core.mixing import MixingConfig, mix_once, mix_stacked, mixing_due
+
+
+def _population(n=4, seed=0):
+    key = jax.random.key(seed)
+
+    def init(k):
+        ks = jax.random.split(k, 4)
+        return {
+            "embed": {"w": jax.random.normal(ks[0], (20, 8))},
+            "blocks": [{"w": jax.random.normal(ks[1 + i], (8, 8))} for i in range(2)],
+            "head": {"w": jax.random.normal(ks[3], (8, 4))},
+        }
+
+    p = pop.init_population(init, key, n, same_init=False)
+    lids = infer_layer_ids(pop.member(p, 0), 2)
+    return p, lids, total_layers(2)
+
+
+def test_papa_contracts_distance_eq2():
+    p, lids, tl = _population()
+    cfg = MixingConfig(kind="papa", papa_alpha=0.9)
+    out, _, _ = mix_once(jax.random.key(1), p, None, cfg, lids, tl)
+    d0, d1 = sq_distance_to_consensus(p), sq_distance_to_consensus(out)
+    np.testing.assert_allclose(float(d1), (0.9 ** 2) * float(d0), rtol=1e-5)
+
+
+def test_papa_all_collapses_to_consensus():
+    p, lids, tl = _population()
+    cfg = MixingConfig(kind="papa_all")
+    out, _, _ = mix_once(jax.random.key(1), p, None, cfg, lids, tl)
+    assert float(sq_distance_to_consensus(out)) < 1e-8
+    c = consensus(p)
+    m0 = pop.member(out, 0)
+    for a, b in zip(jax.tree_util.tree_leaves(c), jax.tree_util.tree_leaves(m0)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["dense", "bucketed"])
+def test_wash_preserves_distance(mode):
+    p, lids, tl = _population()
+    cfg = MixingConfig(kind="wash", base_p=0.7, mode=mode)
+    out, _, comm = mix_once(jax.random.key(1), p, None, cfg, lids, tl)
+    np.testing.assert_allclose(
+        float(sq_distance_to_consensus(out)),
+        float(sq_distance_to_consensus(p)),
+        rtol=1e-4,
+    )
+    assert float(comm) > 0
+
+
+def test_wash_opt_shuffles_momentum_with_same_plan():
+    """Where a parameter moved n->m, its momentum must move identically."""
+    p, lids, tl = _population()
+    mu = jax.tree_util.tree_map(lambda x: x * 10.0, p)  # recognizable copy
+    opt = {"mu": mu, "step": jnp.zeros((4,), jnp.int32)}
+    cfg = MixingConfig(kind="wash_opt", base_p=0.9, mode="dense")
+    out_p, out_o, comm = mix_once(jax.random.key(2), p, opt, cfg, lids, tl)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(out_p), jax.tree_util.tree_leaves(out_o["mu"])
+    ):
+        np.testing.assert_allclose(np.asarray(a) * 10.0, np.asarray(b), rtol=1e-5)
+    # double communication vs plain wash
+    _, _, comm_plain = mix_once(
+        jax.random.key(2), p, opt, MixingConfig(kind="wash", base_p=0.9, mode="dense"),
+        lids, tl,
+    )
+    np.testing.assert_allclose(float(comm), 2 * float(comm_plain), rtol=1e-6)
+
+
+def test_last_layer_never_shuffled_with_decreasing_schedule():
+    p, lids, tl = _population()
+    cfg = MixingConfig(kind="wash", base_p=1.0, mode="dense", schedule="decreasing")
+    out, _, _ = mix_once(jax.random.key(3), p, None, cfg, lids, tl)
+    np.testing.assert_allclose(
+        np.asarray(out["head"]["w"]), np.asarray(p["head"]["w"])
+    )
+    # ... and the first layer IS shuffled at p=1
+    assert not np.allclose(np.asarray(out["embed"]["w"]), np.asarray(p["embed"]["w"]))
+
+
+def test_mixing_due_periods():
+    wash = MixingConfig(kind="wash")
+    papa = MixingConfig(kind="papa", papa_every=10)
+    none = MixingConfig(kind="none")
+    assert mixing_due(1, wash) and mixing_due(999, wash)
+    assert mixing_due(10, papa) and not mixing_due(11, papa) and not mixing_due(0, papa)
+    assert not mixing_due(5, none)
+    windowed = MixingConfig(kind="wash", start_step=10, stop_step=20)
+    assert not mixing_due(5, windowed)
+    assert mixing_due(15, windowed)
+    assert not mixing_due(25, windowed)
+
+
+def test_mix_stacked_step_dispatch():
+    p, lids, tl = _population()
+    cfg = MixingConfig(kind="papa", papa_every=10, papa_alpha=0.5)
+    out, _, comm = mix_stacked(7, jax.random.key(0), p, None, cfg, lids, tl)
+    assert float(comm) == 0.0  # not due
+    out, _, comm = mix_stacked(10, jax.random.key(0), p, None, cfg, lids, tl)
+    assert float(comm) > 0.0

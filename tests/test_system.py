@@ -1,0 +1,81 @@
+"""End-to-end behaviour: the paper's central claim at CPU scale.
+
+Trains a small heterogeneous population with Baseline / WASH / PAPA and
+checks the qualitative pattern of Tables 2–3: WASH's uniform soup must work
+(close to its ensemble) at a fraction of PAPA's communication, and WASH's
+consensus distance must stay below the independently-trained baseline's
+(Fig. 2).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import averaging as avg
+from repro.core.mixing import MixingConfig
+from repro.data import (
+    apply_policy,
+    eval_images,
+    make_image_task,
+    member_policies,
+    sample_images,
+    soft_cross_entropy,
+)
+from repro.models.cnn import ClassifierConfig, apply_classifier, init_classifier
+from repro.train import train_population
+
+KEY = jax.random.key(42)
+
+
+def _setup(noise=1.4):
+    task = make_image_task(KEY, num_classes=10, hw=10, noise=noise)
+    ccfg = ClassifierConfig(kind="mlp", width=48, depth=2, num_classes=10, image_hw=10)
+    pols = member_policies(jax.random.fold_in(KEY, 7), 3, heterogeneous=True)
+
+    def data_fn(m, step, k):
+        imgs, labels = sample_images(task, k, 48)
+        x, y = apply_policy(jax.random.fold_in(k, 1), imgs, labels, 10, pols[m])
+        return {"x": x, "y": y}
+
+    def loss_fn(params, batch):
+        return soft_cross_entropy(apply_classifier(params, ccfg, batch["x"]),
+                                  batch["y"])
+
+    ex, ey = eval_images(task, jax.random.fold_in(KEY, 99), 256)
+    return task, ccfg, data_fn, loss_fn, ex, ey
+
+
+def _train(mcfg, ccfg, data_fn, loss_fn, steps=150):
+    tcfg = TrainConfig(population=3, optimizer="sgd", lr=0.08, total_steps=steps,
+                       batch_size=48)
+    return train_population(
+        KEY, lambda k: init_classifier(k, ccfg), loss_fn, data_fn,
+        tcfg, mcfg, ccfg.num_blocks, record_every=50,
+    )
+
+
+def test_wash_average_close_to_ensemble_and_cheaper_than_papa():
+    task, ccfg, data_fn, loss_fn, ex, ey = _setup()
+    apply_fn = lambda p, x: apply_classifier(p, ccfg, x)
+
+    wash = _train(MixingConfig(kind="wash", base_p=0.05, mode="dense"),
+                  ccfg, data_fn, loss_fn)
+    papa = _train(MixingConfig(kind="papa", papa_every=10, papa_alpha=0.99),
+                  ccfg, data_fn, loss_fn)
+
+    ens = float(avg.ensemble_accuracy(apply_fn, wash.population, ex, ey))
+    soup = float(avg.model_accuracy(apply_fn, avg.uniform_soup(wash.population), ex, ey))
+    assert ens > 0.5, "population failed to learn"
+    # central claim: weight averaging works under WASH (≈ ensemble accuracy)
+    assert soup > ens - 0.08, (soup, ens)
+    # communication: WASH ≪ PAPA (paper Table 1)
+    assert wash.comm_scalars < 0.5 * papa.comm_scalars, (
+        wash.comm_scalars, papa.comm_scalars)
+
+
+def test_wash_consensus_distance_below_baseline():
+    task, ccfg, data_fn, loss_fn, ex, ey = _setup()
+    base = _train(MixingConfig(kind="none"), ccfg, data_fn, loss_fn, steps=120)
+    wash = _train(MixingConfig(kind="wash", base_p=0.05, mode="dense"),
+                  ccfg, data_fn, loss_fn, steps=120)
+    assert wash.history["consensus"][-1] < base.history["consensus"][-1]

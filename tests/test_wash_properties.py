@@ -1,0 +1,190 @@
+"""Property tests for the WASH shuffle — the paper's Eq. (3), (4), (5)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import shuffle as shf
+from repro.core.consensus import sq_distance_to_consensus
+from repro.core.schedules import layer_probability, layer_probability_array
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@st.composite
+def leaf_cases(draw):
+    n = draw(st.integers(2, 8))
+    d = draw(st.integers(1, 300))
+    p = draw(st.floats(0.01, 1.0))
+    seed = draw(st.integers(0, 2**31 - 1))
+    return n, d, p, seed
+
+
+# ---------------------------------------------------------------------------
+# Eq. (5): the shuffle exactly preserves Σ_n ||θ_n − θ̄||²
+# ---------------------------------------------------------------------------
+
+
+@given(leaf_cases())
+@settings(**SETTINGS)
+def test_dense_preserves_consensus_distance(case):
+    n, d, p, seed = case
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (n, d))
+    perm, mask = shf.dense_plan(key, (d,), n, p)
+    out = shf.dense_apply(x, perm, mask)
+    d0 = sq_distance_to_consensus({"x": x})
+    d1 = sq_distance_to_consensus({"x": out})
+    np.testing.assert_allclose(float(d0), float(d1), rtol=1e-5)
+
+
+@given(leaf_cases())
+@settings(**SETTINGS)
+def test_bucketed_preserves_consensus_distance(case):
+    n, d, p, seed = case
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (n, d))
+    plan = shf.bucketed_plan(key, d, n, p)
+    if plan is None:
+        return
+    out = shf.bucketed_apply_stacked(x, plan)
+    np.testing.assert_allclose(
+        float(sq_distance_to_consensus({"x": x})),
+        float(sq_distance_to_consensus({"x": out})),
+        rtol=1e-5,
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-coordinate multiset invariance: a shuffle only *moves* values
+# ---------------------------------------------------------------------------
+
+
+@given(leaf_cases())
+@settings(**SETTINGS)
+def test_dense_is_coordinatewise_permutation(case):
+    n, d, p, seed = case
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (n, d))
+    perm, mask = shf.dense_plan(key, (d,), n, p)
+    out = shf.dense_apply(x, perm, mask)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(x), axis=0), np.sort(np.asarray(out), axis=0), rtol=1e-6
+    )
+
+
+@given(leaf_cases())
+@settings(**SETTINGS)
+def test_bucketed_is_coordinatewise_permutation(case):
+    n, d, p, seed = case
+    key = jax.random.key(seed)
+    x = jax.random.normal(key, (n, d))
+    plan = shf.bucketed_plan(key, d, n, p)
+    if plan is None:
+        return
+    out = shf.bucketed_apply_stacked(x, plan)
+    np.testing.assert_allclose(
+        np.sort(np.asarray(x), axis=0), np.sort(np.asarray(out), axis=0), rtol=1e-6
+    )
+
+
+# ---------------------------------------------------------------------------
+# Eq. (4): E[θ̂_n] = (1-p)·θ_n + p·θ̄   (statistical, fixed tolerance)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["dense", "bucketed"])
+def test_expectation_matches_papa_ema(mode):
+    n, d, p, reps = 4, 2000, 0.3, 400
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (n, d))
+    acc = jnp.zeros_like(x)
+    for i in range(reps):
+        k = jax.random.fold_in(key, i)
+        if mode == "dense":
+            perm, mask = shf.dense_plan(k, (d,), n, p)
+            acc = acc + shf.dense_apply(x, perm, mask)
+        else:
+            plan = shf.bucketed_plan(k, d, n, p)
+            acc = acc + shf.bucketed_apply_stacked(x, plan)
+    emp = acc / reps
+    if mode == "bucketed":
+        # exactly-k selection: realized per-coordinate rate is k*n/d
+        k_per = shf.bucket_count(d, n, p)
+        p_eff = k_per * n / d
+    else:
+        p_eff = p
+    expected = (1 - p_eff) * x + p_eff * jnp.mean(x, axis=0, keepdims=True)
+    # CLT tolerances: per-coordinate estimator std ≈ sqrt(p)·spread/sqrt(reps)
+    # ≈ 0.05 here; the mean |err| over 8000 coords is a tight statistic,
+    # the max is a loose 5-sigma guard.
+    mean_err = float(jnp.mean(jnp.abs(emp - expected)))
+    max_err = float(jnp.max(jnp.abs(emp - expected)))
+    assert mean_err < 0.05, mean_err
+    assert max_err < 0.5, max_err
+
+
+# ---------------------------------------------------------------------------
+# plan determinism + communication accounting (paper Table 1)
+# ---------------------------------------------------------------------------
+
+
+def test_plans_are_deterministic_given_key():
+    key = jax.random.key(7)
+    n, d, p = 4, 500, 0.2
+    p1 = shf.bucketed_plan(key, d, n, p)
+    p2 = shf.bucketed_plan(key, d, n, p)
+    assert jnp.array_equal(p1, p2)
+    d1 = shf.dense_plan(key, (d,), n, p)
+    d2 = shf.dense_plan(key, (d,), n, p)
+    assert jnp.array_equal(d1[0], d2[0]) and jnp.array_equal(d1[1], d2[1])
+
+
+def test_bucketed_comm_volume_is_p_d():
+    """Each member sends ~p·d·(N-1)/N scalars per step — Table 1."""
+    n, d, p = 4, 10000, 0.05
+    plan = shf.bucketed_plan(jax.random.key(0), d, n, p)
+    sent = float(shf.plan_sent_scalars(plan, n, "bucketed"))
+    expect = p * d * (n - 1) / n
+    assert abs(sent - expect) / expect < 0.05
+
+
+def test_bucketed_indices_unique():
+    plan = shf.bucketed_plan(jax.random.key(3), 4096, 4, 0.25)
+    idx = np.asarray(plan).ravel()
+    assert len(np.unique(idx)) == len(idx)
+    assert idx.min() >= 0 and idx.max() < 4096
+
+
+# ---------------------------------------------------------------------------
+# Eq. (6): layer-wise schedule
+# ---------------------------------------------------------------------------
+
+
+def test_layer_schedule_decreasing():
+    L = 10
+    probs = [layer_probability(0.1, l, L, "decreasing") for l in range(L)]
+    assert probs[0] == pytest.approx(0.1)
+    assert probs[-1] == pytest.approx(0.0)
+    assert all(a >= b for a, b in zip(probs, probs[1:]))
+
+
+def test_layer_schedule_variants():
+    L = 6
+    inc = layer_probability_array(0.2, np.arange(L), L, "increasing")
+    const = layer_probability_array(0.2, np.arange(L), L, "constant")
+    assert inc[0] == 0.0 and inc[-1] == pytest.approx(0.2)
+    assert np.allclose(const, 0.2)
+
+
+def test_layered_bucketed_depth_profile():
+    """Stacked-block leaves keep the per-layer selection profile."""
+    L, d_rest, n = 8, 512, 4
+    p_vec = layer_probability_array(0.5, np.arange(1, L + 1), L + 2, "decreasing")
+    plan = shf.bucketed_plan_layered(jax.random.key(0), L, d_rest, n, p_vec)
+    counts = np.bincount(np.asarray(plan).ravel() // d_rest, minlength=L)
+    # monotone-ish decrease (allow small trim noise)
+    assert counts[0] > counts[-1]
+    assert counts[0] >= counts[L // 2] >= counts[-1] - 2
