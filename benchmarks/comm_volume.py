@@ -58,6 +58,58 @@ def analytic_ratio(arch_id: str, base_p: float):
     return wash / papa, d
 
 
+def measured_engine_volume(base_p: float = 0.1, steps: int = 8, n: int = 4):
+    """Measured ppermute volume of the fused shard_map engine.
+
+    Trains a tiny population with the fused engine and reports the comm
+    accounting its collective path actually recorded (scalars sent per
+    member per step over the ppermute exchanges), next to the exact
+    static expectation Σ_leaves k_per·(N-1) from the same plans.
+    """
+    import jax.numpy as jnp
+
+    from repro.configs.base import TrainConfig
+    from repro.core import shuffle as shf
+    from repro.core.layer_index import infer_layer_ids
+    from repro.core.mixing import MixingConfig
+    from repro.core.schedules import layer_probability  # noqa: F401 (doc link)
+    from repro.train.engine import train_population_sharded
+
+    key = jax.random.key(0)
+
+    def init(k):
+        ks = jax.random.split(k, 3)
+        return {"embed": {"w": jax.random.normal(ks[0], (64, 32))},
+                "blocks": [{"w1": jax.random.normal(ks[1], (32, 32))}],
+                "head": {"w": jax.random.normal(ks[2], (32, 8))}}
+
+    def data_fn(m, step, k):
+        return {"x": jax.random.normal(k, (4, 64)),
+                "y": jax.random.normal(jax.random.fold_in(k, 1), (4, 8))}
+
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["embed"]["w"] @ p["blocks"][0]["w1"])
+        return jnp.mean((h @ p["head"]["w"] - b["y"]) ** 2)
+
+    tcfg = TrainConfig(population=n, optimizer="sgd", lr=0.05,
+                       total_steps=steps, batch_size=4)
+    mcfg = MixingConfig(kind="wash", base_p=base_p, mode="bucketed")
+    res = train_population_sharded(
+        key, init, loss_fn, data_fn, tcfg, mcfg, 1, record_every=steps
+    )
+
+    # exact static expectation from one step's plan (plans are equal-sized
+    # every step: k_per depends only on shapes, N, p)
+    lids = infer_layer_ids(init(key), 1)
+    plan = shf.make_plan(
+        jax.random.fold_in(key, 0), init(key), lids, total_layers(1),
+        base_p, "decreasing", mode="bucketed", n=n,
+    )
+    expected_per_step = float(shf.plan_sent_scalars(plan, n, mode="bucketed"))
+    measured_per_step = res.comm_scalars / steps
+    return measured_per_step, expected_per_step
+
+
 def run(quick: bool = True):
     rows = []
     # 1. analytic Eq. 6 accounting on a real arch config
@@ -70,7 +122,17 @@ def run(quick: bool = True):
                  "papa_scalars_per_step": d / PAPA_T}),
         ))
 
-    # 2. HLO-measured bytes from the population dry-runs
+    # 2. measured ppermute volume of the fused shard_map engine (tiny run)
+    measured, expected = measured_engine_volume()
+    rows.append((
+        "table1_measured_fused_engine",
+        0.0,
+        fmt({"sent_scalars_per_member_per_step": measured,
+             "static_plan_expectation": expected,
+             "bytes_per_member_per_step_f32": measured * 4}),
+    ))
+
+    # 3. HLO-measured bytes from the population dry-runs
     for path in sorted(glob.glob("benchmarks/dryrun/*_wash*_fu.json")):
         rec = json.load(open(path))
         if rec.get("status") != "ok":

@@ -1,8 +1,17 @@
 """Pallas kernel microbenchmarks (interpret mode on CPU: correctness-scale
 timings only; the derived column reports achieved GB/s / GFLOP/s against
-the jnp reference implementation on the same shapes)."""
+the jnp reference implementation on the same shapes).
+
+Also times the fused shard_map training engine against the two-jit vmap
+reference on the same tiny population (dispatch overhead + fusion win is
+host-side, so it is measurable even on CPU), and mirrors every row into
+``benchmarks/out/kernels_bench.json`` for downstream tooling.
+"""
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +21,112 @@ from repro.kernels import ops, ref
 from benchmarks._util import Row, fmt, time_fn
 
 KEY = jax.random.key(0)
+
+JSON_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "out", "kernels_bench.json")
+
+
+def _engine_step_rows(steps: int = 16):
+    """Fused single-dispatch chunk (the engine's own ``make_fused_chunk_fn``,
+    so the published timing measures the shipped body) vs the reference's
+    2 jits/step."""
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import population as pop
+    from repro.core.layer_index import infer_layer_ids, total_layers
+    from repro.core.mixing import MixingConfig, mix_once
+    from repro.launch.mesh import make_host_ensemble_mesh
+    from repro.optim import make_optimizer
+    from repro.train.engine import make_fused_chunk_fn
+
+    n, B, din, dh = 4, 8, 64, 128
+    mcfg = MixingConfig(kind="wash", base_p=0.1, mode="bucketed")
+    key = jax.random.key(0)
+
+    def init(k):
+        ks = jax.random.split(k, 3)
+        return {"embed": {"w": jax.random.normal(ks[0], (din, dh)) * 0.1},
+                "blocks": [{"w1": jax.random.normal(ks[1], (dh, dh)) * 0.1}],
+                "head": {"w": jax.random.normal(ks[2], (dh, 8)) * 0.1}}
+
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["embed"]["w"] @ p["blocks"][0]["w1"])
+        return jnp.mean((h @ p["head"]["w"] - b["y"]) ** 2)
+
+    population = pop.init_population(init, key, n, same_init=False)
+    lids = infer_layer_ids(pop.member(population, 0), 1)
+    tl = total_layers(1)
+    opt_init, opt_update = make_optimizer("sgd")
+    opt_state = jax.vmap(opt_init)(population)
+    lr = jnp.float32(0.05)
+    batches = {
+        "x": jax.random.normal(jax.random.fold_in(key, 1), (steps, n, B, din)),
+        "y": jax.random.normal(jax.random.fold_in(key, 2), (steps, n, B, 8)),
+    }
+    keydata = jnp.stack([
+        jax.random.key_data(jax.random.fold_in(key, 100 + t)) for t in range(steps)
+    ])
+    gates = jnp.ones((steps,), jnp.float32)
+
+    def one(pm, sm, bm):
+        loss, g = jax.value_and_grad(loss_fn)(pm, bm)
+        p2, s2 = opt_update(pm, g, sm, lr)
+        return p2, s2, loss
+
+    # --- unfused reference: 2 dispatches per step, Python step loop -------
+    @jax.jit
+    def train_step(p, s, b):
+        return jax.vmap(one)(p, s, b)
+
+    @jax.jit
+    def mix_step(p, s, kd):
+        return mix_once(jax.random.wrap_key_data(kd), p, s, mcfg, lids, tl)
+
+    def unfused(p, s):
+        for t in range(steps):
+            b = {k: v[t] for k, v in batches.items()}
+            p, s, _ = train_step(p, s, b)
+            p, s, _ = mix_step(p, s, keydata[t])
+        return p
+
+    # --- fused engine chunk: one dispatch for all steps (the engine's own
+    # builder; donate=False so timing iterations can reuse their inputs) ---
+    mesh = make_host_ensemble_mesh(n)
+    lrs = jnp.full((steps,), lr)
+    pspec = jax.tree_util.tree_map(lambda _: P("ens"), population)
+    ospec = jax.tree_util.tree_map(lambda _: P("ens"), opt_state)
+    bspec = jax.tree_util.tree_map(lambda _: P(None, "ens"), batches)
+    fused = make_fused_chunk_fn(
+        mesh, mcfg, lids, tl, opt_update, loss_fn, pspec, ospec, bspec,
+        donate=False,
+    )
+
+    us_unfused = time_fn(lambda: unfused(population, opt_state), iters=3)
+    us_fused = time_fn(
+        lambda: fused(population, opt_state, batches, lrs, keydata, gates),
+        iters=3,
+    )
+    per_un, per_fu = us_unfused / steps, us_fused / steps
+    return [
+        ("engine_unfused_step", per_un,
+         fmt({"dispatches_per_step": 2, "steps": steps})),
+        ("engine_fused_step", per_fu,
+         fmt({"dispatches_per_step": 1.0 / steps, "steps": steps,
+              "speedup_vs_unfused": per_un / per_fu})),
+    ]
+
+
+def _write_json(rows):
+    os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
+    by_name = {name: {"us_per_call": us, "derived": derived}
+               for name, us, derived in rows}
+    report = {
+        "rows": by_name,
+        "engine_fused_step_us": by_name.get("engine_fused_step", {}).get("us_per_call"),
+        "engine_unfused_step_us": by_name.get("engine_unfused_step", {}).get("us_per_call"),
+    }
+    with open(JSON_OUT, "w") as f:
+        json.dump(report, f, indent=2)
 
 
 def run(quick: bool = True):
@@ -28,6 +143,16 @@ def run(quick: bool = True):
     rows.append(("kernel_wash_shuffle", us_k,
                  fmt({"ref_us": us_r, "bytes": bytes_moved,
                       "interp_gbps": bytes_moved / us_k / 1e3})))
+
+    # bucketed_shuffle: same stacked leaf, TPU-native index-plan mode
+    from repro.core import shuffle as shf
+    idx = shf.bucketed_plan(jax.random.fold_in(KEY, 9), d, n, 0.05)
+    us_k = time_fn(lambda: ops.bucketed_shuffle(x, idx, block_d=4096), iters=3)
+    # jit over real arguments so XLA cannot constant-fold the reference away
+    us_r = time_fn(jax.jit(shf.bucketed_apply_stacked), x, idx, iters=3)
+    rows.append(("kernel_bucketed_shuffle", us_k,
+                 fmt({"ref_us": us_r, "selected": idx.size,
+                      "sent_per_member": idx.shape[1] * (n - 1)})))
 
     # flash attention: prefill-like block
     B, S, H, KV, hd = 1, 512, 4, 2, 64
@@ -53,6 +178,9 @@ def run(quick: bool = True):
     flops = 4 * B * T * H * hd * hd
     rows.append(("kernel_rwkv6_scan", us_k,
                  fmt({"ref_us": us_r, "flops": flops})))
+
+    rows.extend(_engine_step_rows(steps=8 if quick else 32))
+    _write_json(rows)
     return rows
 
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.core import shuffle as shf
+from repro.core.compat import axis_size
 from repro.core.schedules import active_window
 
 PyTree = Any
@@ -188,7 +189,7 @@ def mix_collective(
     if cfg.kind == "none" or not active_window(step, cfg.start_step, cfg.stop_step):
         return params, opt_state, zero
 
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     d = sum(x.size for x in jax.tree_util.tree_leaves(params))
 
     if cfg.kind in ("wash", "wash_opt"):
@@ -219,3 +220,78 @@ def mix_collective(
         return avg, opt_state, zero + float(d)
 
     return params, opt_state, zero
+
+
+def mix_collective_blocked(
+    key: jax.Array,
+    params: PyTree,
+    opt_state: Optional[PyTree],
+    cfg: MixingConfig,
+    layer_ids: PyTree,
+    total_layers: int,
+    axis_name: str,
+    gate: jax.Array,
+) -> Tuple[PyTree, Optional[PyTree], jax.Array]:
+    """Fused-engine mixing on a *block* of members under shard_map.
+
+    ``params`` leaves carry a leading local-ens axis (n_local members per
+    shard; global population n = n_local * axis_size, so the same code
+    serves one-member-per-device TPU meshes and the 1-device CPU fallback).
+
+    ``gate`` is a traced {0,1} scalar — the Python-side :func:`mixing_due`
+    result for this step, threaded through ``lax.scan`` — so the collective
+    always executes with static shapes and both the result and the comm
+    accounting are masked.  The WASH plan is built once from the shared key
+    and replayed on the optimizer moments (WASH+Opt), exactly as in the
+    stacked reference.
+    """
+    zero = jnp.zeros((), jnp.float32)
+    if cfg.kind == "none":
+        return params, opt_state, zero
+
+    n_local = jax.tree_util.tree_leaves(params)[0].shape[0]
+    n = n_local * axis_size(axis_name)
+    d = sum(x.size // n_local for x in jax.tree_util.tree_leaves(params))
+
+    def _gated(new_tree, old_tree):
+        return jax.tree_util.tree_map(
+            lambda a, b: jnp.where(gate > 0, a, b), new_tree, old_tree
+        )
+
+    if cfg.kind in ("wash", "wash_opt"):
+        member = jax.tree_util.tree_map(lambda x: x[0], params)
+        plan = shf.make_plan(
+            key, member, layer_ids, total_layers, cfg.base_p, cfg.schedule,
+            mode="bucketed", n=n,
+        )
+        new_params = shf.apply_plan_collective_blocked(plan, params, axis_name)
+        new_opt = opt_state
+        comm = zero + shf.plan_sent_scalars(plan, n, mode="bucketed")
+        if cfg.shuffles_optimizer() and opt_state is not None:
+            new_opt = dict(opt_state)
+            for mk, mv in momentum_like_leaves(opt_state, params).items():
+                new_opt[mk] = _gated(
+                    shf.apply_plan_collective_blocked(plan, mv, axis_name), mv
+                )
+                comm = comm + shf.plan_sent_scalars(plan, n, mode="bucketed")
+        return _gated(new_params, params), new_opt, gate * comm
+
+    if cfg.kind == "papa":
+        pulled = jax.tree_util.tree_map(
+            lambda x: cfg.papa_alpha * x
+            + (1.0 - cfg.papa_alpha)
+            * lax.pmean(jnp.mean(x, axis=0, keepdims=True), axis_name),
+            params,
+        )
+        return _gated(pulled, params), opt_state, gate * (zero + float(d))
+
+    if cfg.kind == "papa_all":
+        avg = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                lax.pmean(jnp.mean(x, axis=0, keepdims=True), axis_name), x.shape
+            ),
+            params,
+        )
+        return _gated(avg, params), opt_state, gate * (zero + float(d))
+
+    raise ValueError(f"unknown mixing kind {cfg.kind!r}")

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core.compat import axis_size
 from repro.core.schedules import layer_probability, layer_probability_array
 
 PyTree = Any
@@ -168,7 +169,7 @@ def bucketed_apply_collective(
     (n+s)-th neighbour).  Total send volume per member per step:
     k_per * (N-1) scalars = p·d·(N-1)/N — the paper's Table 1 accounting.
     """
-    n = lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     out = x_flat
     for s in range(1, n):
         vals = x_flat[idx[s]]
@@ -176,6 +177,46 @@ def bucketed_apply_collective(
             vals, axis_name, perm=[(j, (j - s) % n) for j in range(n)]
         )
         out = out.at[idx[s]].set(recv)
+    return out
+
+
+def _block_from(vals: jax.Array, axis_name: str, q: int, m: int) -> jax.Array:
+    """This shard's copy of the block held q shards ahead on the ring."""
+    if q % m == 0:
+        return vals
+    return lax.ppermute(
+        vals, axis_name, perm=[(j, (j - q) % m) for j in range(m)]
+    )
+
+
+def bucketed_apply_collective_blocked(
+    x_flat: jax.Array, idx: jax.Array, axis_name: str
+) -> jax.Array:
+    """Bucketed apply for a shard holding ``n_local`` contiguous members.
+
+    ``x_flat``: (n_local, D); the global population is n = n_local * m
+    (m = mesh axis size).  Bucket s applies the global cyclic shift
+    θ̂_g = θ_{(g+s) mod n}.  For member i of shard j (global g = j*n_local+i)
+    the source rows [g+s, g+s+n_local) span at most two neighbouring
+    shards, so each bucket costs ≤ 2 static ``ppermute`` ops regardless of
+    n_local.  Degenerate cases recover the existing paths exactly:
+    m == 1 → jnp.roll (the stacked reference), n_local == 1 → the
+    per-member :func:`bucketed_apply_collective`.
+    """
+    m = axis_size(axis_name)
+    n_local = x_flat.shape[0]
+    n = n_local * m
+    out = x_flat
+    for s in range(1, n):
+        vals = out[:, idx[s]]                       # (n_local, k_per)
+        q, r = divmod(s, n_local)
+        recv1 = _block_from(vals, axis_name, q, m)
+        if r == 0:
+            shifted = recv1
+        else:
+            recv2 = _block_from(vals, axis_name, q + 1, m)
+            shifted = jnp.concatenate([recv1, recv2], axis=0)[r : r + n_local]
+        out = out.at[:, idx[s]].set(shifted)
     return out
 
 
@@ -272,6 +313,28 @@ def apply_plan_collective(plan: PyTree, tree: PyTree, axis_name: str) -> PyTree:
             return leaf
         flat = leaf.reshape(-1)
         return bucketed_apply_collective(flat, p, axis_name).reshape(leaf.shape)
+
+    return jax.tree_util.tree_map(_one, plan, tree, is_leaf=lambda x: x is None)
+
+
+def apply_plan_collective_blocked(
+    plan: PyTree, tree: PyTree, axis_name: str
+) -> PyTree:
+    """Apply a bucketed plan to a block of members under shard_map.
+
+    ``tree`` leaves carry a leading local-ens axis (n_local, *member_shape);
+    the plan was built for the *global* population, so every shard applies
+    the same indices and the cross-shard rows travel by ``ppermute``.
+    """
+
+    def _one(p, leaf):
+        if p is None:
+            return leaf
+        n_local = leaf.shape[0]
+        flat = leaf.reshape(n_local, -1)
+        return bucketed_apply_collective_blocked(flat, p, axis_name).reshape(
+            leaf.shape
+        )
 
     return jax.tree_util.tree_map(_one, plan, tree, is_leaf=lambda x: x is None)
 

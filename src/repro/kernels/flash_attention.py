@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.compat import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -81,7 +83,7 @@ def flash_attention_pallas(
     window=None,
     block_q: int = 256,
     block_k: int = 256,
-    interpret: bool = True,
+    interpret=None,
 ) -> jax.Array:
     """q: (B,S,H,hd); k/v: (B,S,KV,hd) -> (B,S,H,hd).  GQA: H % KV == 0."""
     B, S, H, hd = q.shape
@@ -110,6 +112,6 @@ def flash_attention_pallas(
         ],
         out_specs=pl.BlockSpec((None, block_q, hd), lambda h, i: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(qh, kh, vh)
     return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

@@ -1,7 +1,8 @@
 """Jit'd public wrappers for the Pallas kernels.
 
-``interpret`` defaults to True (this container is CPU-only; the kernels
-target TPU).  On real TPU hardware pass interpret=False.
+``interpret`` defaults to None → auto-detect: the kernels are compiled on
+TPU and interpreted elsewhere (this container is CPU-only).  Pass an
+explicit bool to force either path.
 """
 
 from __future__ import annotations
@@ -12,12 +13,20 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
-from repro.kernels.wash_shuffle import wash_shuffle_pallas
+from repro.kernels.wash_shuffle import (
+    bucketed_shuffle_pallas,
+    wash_shuffle_pallas,
+)
 
 
 @functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
-def wash_shuffle(x, perm, mask, block_d: int = 2048, interpret: bool = True):
+def wash_shuffle(x, perm, mask, block_d: int = 2048, interpret=None):
     return wash_shuffle_pallas(x, perm, mask, block_d=block_d, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def bucketed_shuffle(x, idx, block_d: int = 2048, interpret=None):
+    return bucketed_shuffle_pallas(x, idx, block_d=block_d, interpret=interpret)
 
 
 @functools.partial(
@@ -25,7 +34,7 @@ def wash_shuffle(x, perm, mask, block_d: int = 2048, interpret: bool = True):
 )
 def flash_attention(
     q, k, v, causal: bool = True, window=None,
-    block_q: int = 256, block_k: int = 256, interpret: bool = True,
+    block_q: int = 256, block_k: int = 256, interpret=None,
 ):
     return flash_attention_pallas(
         q, k, v, causal=causal, window=window,
@@ -34,5 +43,5 @@ def flash_attention(
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rwkv6_scan(r, k, v, w, u, chunk: int = 16, interpret: bool = True):
+def rwkv6_scan(r, k, v, w, u, chunk: int = 16, interpret=None):
     return rwkv6_scan_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.compat import resolve_interpret
+
 
 def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, out_ref, *, chunk: int):
     t, hd = r_ref.shape
@@ -51,7 +53,7 @@ def rwkv6_scan_pallas(
     u: jax.Array,
     *,
     chunk: int = 16,
-    interpret: bool = True,
+    interpret=None,
 ) -> jax.Array:
     """r/k/v/w: (B,T,H,hd); u: (H,hd) -> y (B,T,H,hd).
 
@@ -77,6 +79,6 @@ def rwkv6_scan_pallas(
         ],
         out_specs=pl.BlockSpec((None, T, hd), lambda h: (h, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B * H, T, hd), r.dtype),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(rr, kk, vv, ww, uu)
     return out.reshape(B, H, T, hd).transpose(0, 2, 1, 3)

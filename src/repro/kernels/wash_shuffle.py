@@ -17,10 +17,13 @@ compare+select, no hardware gather), while the coordinate axis is tiled to
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core.compat import resolve_interpret
 
 
 def _shuffle_kernel(x_ref, perm_ref, mask_ref, out_ref, *, n: int):
@@ -40,9 +43,10 @@ def wash_shuffle_pallas(
     mask: jax.Array,
     *,
     block_d: int = 2048,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jax.Array:
     """x: (N, D); perm: (N, D) int32; mask: (D,) bool -> shuffled (N, D)."""
+    interpret = resolve_interpret(interpret)
     n, d = x.shape
     block_d = min(block_d, d)
     # pad D to a multiple of block_d
@@ -66,3 +70,40 @@ def wash_shuffle_pallas(
         interpret=interpret,
     )(x, perm, mask[None, :])
     return out[:, :d]
+
+
+def bucketed_shuffle_pallas(
+    x: jax.Array,
+    idx: jax.Array,
+    *,
+    block_d: int = 2048,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """Bucketed WASH apply (core.shuffle's TPU-native mode) as one fused
+    VMEM pass over the stacked (N, D) leaf.
+
+    ``idx``: (N, k_per) int32 plan with pairwise-disjoint rows; bucket s
+    applies the global cyclic shift θ̂_n = θ_{(n+s) mod N} on its
+    coordinates, bucket 0 is the identity.  The bucket structure is first
+    scattered into a per-coordinate shift map (a cheap (D,) int32 op
+    outside the kernel), which turns the apply into exactly the masked
+    permute-gather the dense kernel already fuses:
+
+        perm[n, i] = (n + shift[i]) mod N,   mask[i] = shift[i] > 0
+
+    so both modes share one Pallas kernel, one HBM pass, and one tiling
+    scheme (coordinate axis tiled to ``block_d`` lanes; N-way VPU select
+    along the tiny ens axis instead of a hardware gather).
+    """
+    n, d = x.shape
+    shift = jnp.zeros((d,), jnp.int32)
+    if n > 1:  # bucket 0 is the identity; rows are disjoint → one scatter
+        shift = shift.at[idx[1:]].set(
+            jnp.arange(1, n, dtype=jnp.int32)[:, None]
+        )
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    perm = (rows + shift[None, :]) % n
+    mask = shift > 0
+    return wash_shuffle_pallas(
+        x, perm, mask, block_d=block_d, interpret=interpret
+    )

@@ -220,9 +220,10 @@ def make_shardlocal_mixer(cfg: ModelConfig, mcfg: MixingConfig, mesh,
         return lift(out), new_opt, comm_total
 
     from jax.sharding import PartitionSpec as _P
-    return jax.shard_map(
+    from repro.core.compat import shard_map as _shard_map
+    return _shard_map(
         mixer,
-        mesh=mesh,
+        mesh,
         in_specs=(pop_specs, opt_specs, _P()),
         out_specs=(pop_specs, opt_specs, _P()),
         check_vma=False,
@@ -247,7 +248,8 @@ def compile_once(cfg: ModelConfig, shape: InputShape, mesh, wash: int = 0,
 
     if cfg.shard_hints:
         # with_sharding_constraint(P(...)) needs an ambient mesh
-        with jax.set_mesh(mesh), hints.use_hints(data_axes(mesh), "model"):
+        from repro.core.compat import use_mesh
+        with use_mesh(mesh), hints.use_hints(data_axes(mesh), "model"):
             return _compile_inner(cfg, shape, mesh, wash, mixing_kind, chips,
                                   params_sds, pspecs)
     with contextlib.nullcontext():

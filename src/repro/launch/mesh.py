@@ -12,11 +12,26 @@ device state (the dry-run sets XLA_FLAGS before first jax init).
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.core.compat import make_mesh
 
 
 def _mk(shape, axes):
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
+
+
+def make_host_ensemble_mesh(population: int):
+    """Ens-only mesh over this host's actual devices (fused-engine default).
+
+    One member per device when the population divides the device count;
+    otherwise the largest divisor of the population that fits (1-device CPU
+    fallback: the whole population is one shard_map block and every
+    ppermute degenerates to a local roll)."""
+    ndev = len(jax.devices())
+    size = max(
+        s for s in range(1, min(population, ndev) + 1) if population % s == 0
+    )
+    return _mk((size,), ("ens",))
 
 
 def make_production_mesh(*, multi_pod: bool = False):

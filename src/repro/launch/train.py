@@ -13,6 +13,7 @@ exercised through the dry-run).  Example:
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 
@@ -21,11 +22,11 @@ import jax.numpy as jnp
 
 from repro.configs import INPUT_SHAPES_BY_NAME, get_arch
 from repro.configs.base import TrainConfig
-from repro.core import averaging as avg
 from repro.core.mixing import MixingConfig
 from repro.data import make_lm_task, sample_tokens
 from repro.launch.specs import concrete_batch
 from repro.models import transformer as M
+from repro.serving import averaged_params
 from repro.train import checkpoint, train_population
 
 
@@ -41,6 +42,10 @@ def main(argv=None):
     ap.add_argument("--schedule", default="decreasing",
                     choices=["decreasing", "constant", "increasing"])
     ap.add_argument("--mode", default="dense", choices=["dense", "bucketed"])
+    ap.add_argument("--engine", default="vmap", choices=["vmap", "shard_map"],
+                    help="vmap: two-jit reference loop; shard_map: fused "
+                         "single-jit collective engine (forces bucketed "
+                         "plans for wash kinds)")
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
@@ -74,14 +79,21 @@ def main(argv=None):
     )
     mcfg = MixingConfig(kind=args.mixing, base_p=args.base_p,
                         schedule=args.schedule, mode=args.mode)
+    if (args.engine == "shard_map" and args.mixing in ("wash", "wash_opt")
+            and args.mode != "bucketed"):
+        print("note: engine=shard_map lowers bucketed plans only; "
+              "switching --mode dense -> bucketed")
+        mcfg = dataclasses.replace(mcfg, mode="bucketed")
 
     res = train_population(
         key, lambda k: M.init_params(k, cfg), loss_fn, data_fn,
         tcfg, mcfg, cfg.num_layers, record_every=max(args.steps // 10, 1),
+        engine=args.engine,
     )
 
-    soup = avg.uniform_soup(res.population)
-    print(f"arch={cfg.name} mixing={args.mixing} steps={args.steps}")
+    soup = averaged_params(res)
+    print(f"arch={cfg.name} mixing={args.mixing} steps={args.steps} "
+          f"engine={args.engine}")
     print(f"final mean member loss : {res.history['loss'][-1]:.4f}")
     print(f"consensus distance     : {res.history['consensus'][-1]:.4f}")
     print(f"scalars sent per member: {res.comm_scalars:.3e}")

@@ -1,5 +1,15 @@
 """Serving: batched generation engine over prefill/decode."""
 
-from repro.serving.engine import generate, internal_prefix
+from repro.serving.engine import (
+    averaged_params,
+    generate,
+    generate_from_population,
+    internal_prefix,
+)
 
-__all__ = ["generate", "internal_prefix"]
+__all__ = [
+    "averaged_params",
+    "generate",
+    "generate_from_population",
+    "internal_prefix",
+]

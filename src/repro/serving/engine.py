@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core import averaging
 from repro.models import transformer as M
 
 PyTree = Any
@@ -20,6 +21,43 @@ PyTree = Any
 
 def internal_prefix(cfg: ModelConfig) -> int:
     return cfg.num_patches if cfg.frontend == "vision" else 0
+
+
+def averaged_params(trained: Any) -> PyTree:
+    """Serving params (uniform soup) from either training engine's output.
+
+    Accepts a :class:`repro.train.loop.TrainResult` or a bare stacked
+    population pytree.  The fused shard_map engine returns leaves sharded
+    over the ``ens`` mesh axis; the ens-axis mean runs on the sharded
+    arrays FIRST (1× model size moves, not N×), then the single averaged
+    member is gathered so the serving path can feed it to
+    ``prefill``/``decode_step`` on any mesh.
+    """
+    population = getattr(trained, "population", trained)
+    soup = averaging.uniform_soup(population)
+
+    def _gather(x):
+        devs = getattr(getattr(x, "sharding", None), "device_set", None)
+        if devs is not None and len(devs) > 1:
+            return jnp.asarray(jax.device_get(x))
+        return x
+
+    return jax.tree_util.tree_map(_gather, soup)
+
+
+def generate_from_population(
+    trained: Any,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    max_new_tokens: int,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Serve the averaged model of a trained population (either engine)."""
+    return generate(
+        averaged_params(trained), cfg, batch, max_new_tokens,
+        temperature=temperature, key=key,
+    )
 
 
 def generate(

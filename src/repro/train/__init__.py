@@ -1,6 +1,9 @@
 """Population training loop + checkpointing."""
 
 from repro.train.loop import TrainResult, train_population
+from repro.train.engine import train_population_sharded
 from repro.train import checkpoint
 
-__all__ = ["train_population", "TrainResult", "checkpoint"]
+__all__ = [
+    "train_population", "train_population_sharded", "TrainResult", "checkpoint",
+]

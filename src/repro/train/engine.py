@@ -1,0 +1,226 @@
+"""Fused shard_map training engine: one donated jit per record window.
+
+The reference loop (:mod:`repro.train.loop`) dispatches two separate jits
+per step (optimizer update, then mixing) from a Python loop, so the WASH
+communication story is simulated on a stacked array rather than exercised.
+This engine runs the whole train+mix step as ONE donated jit under
+``shard_map`` over an ``ens`` mesh axis:
+
+  * each mesh shard holds a contiguous block of n_local = N / mesh_ens
+    members (one member per device on a TPU ensemble mesh; the whole
+    population on the 1-device CPU fallback),
+  * WASH shuffles travel over the real ``ppermute`` path
+    (:func:`repro.core.shuffle.bucketed_apply_collective_blocked`) and
+    PAPA pulls over ``pmean``, instead of the stacked gather,
+  * ``lax.scan`` chunks every step between two ``record_every`` boundaries
+    into a single dispatch, so the host is only re-entered where the
+    reference loop would have synced anyway,
+  * the mixing schedule (:func:`repro.core.mixing.mixing_due` per step) is
+    threaded through the scan as a static-shaped gate vector, and the WASH
+    plan is built once per step from the shared key and replayed on the
+    optimizer moments (WASH+Opt) inside the fused step.
+
+WASH kinds always use the ``bucketed`` plan mode here (the dense mode has
+no collective lowering); everything else — init, data order, key
+derivation, optimizer arithmetic, comm accounting — matches the reference
+loop exactly, which `tests/test_engine_parity.py` asserts.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import TrainConfig
+from repro.core import population as pop
+from repro.core.compat import shard_map
+from repro.core.consensus import avg_distance_to_consensus
+from repro.core.layer_index import infer_layer_ids, total_layers
+from repro.core.mixing import MixingConfig, mix_collective_blocked, mixing_due
+from repro.core.prng import step_key
+from repro.optim import cosine_lr, make_optimizer
+from repro.train.loop import TrainResult
+
+PyTree = Any
+
+
+def record_boundaries(total_steps: int, record_every: int) -> List[int]:
+    """Steps at which the reference loop records (its host-sync points)."""
+    return [
+        s for s in range(total_steps)
+        if s % record_every == 0 or s == total_steps - 1
+    ]
+
+
+def chunk_ranges(total_steps: int, record_every: int):
+    """``[(start, stop))`` chunks covering ``range(total_steps)``, each
+    ending on a record boundary, so the fused scan only returns to the host
+    where the reference loop would have synced anyway."""
+    out, start = [], 0
+    for b in record_boundaries(total_steps, record_every):
+        out.append((start, b + 1))
+        start = b + 1
+    return out
+
+
+def make_fused_chunk_fn(
+    mesh,
+    mcfg: MixingConfig,
+    layer_ids: PyTree,
+    tl: int,
+    opt_update: Callable,
+    loss_fn: Callable[[PyTree, Any], jax.Array],
+    pspec: PyTree,
+    ospec: PyTree,
+    bspecs: PyTree,
+    *,
+    donate: bool = True,
+):
+    """Build the engine's fused chunk dispatch: one donated jit scanning
+    (per-member update → gated collective mix) over a chunk of steps under
+    shard_map.  Exposed so benchmarks time the SHIPPED engine body rather
+    than a copy (``benchmarks/kernels_bench.py``; pass ``donate=False``
+    there so repeated timing calls can reuse their inputs)."""
+
+    def chunk_fn(population, opt_state, batches, lrs, keydata, gates):
+        def body(carry, xs):
+            p, s = carry
+            batch, lr, kd, gate = xs
+
+            def one(pm, sm, bm):
+                loss, g = jax.value_and_grad(loss_fn)(pm, bm)
+                p2, s2 = opt_update(pm, g, sm, lr)
+                return p2, s2, loss
+
+            p2, s2, losses = jax.vmap(one)(p, s, batch)
+            k = jax.random.wrap_key_data(kd)
+            p3, s3, comm = mix_collective_blocked(
+                k, p2, s2, mcfg, layer_ids, tl, "ens", gate
+            )
+            loss_mean = lax.pmean(jnp.mean(losses), "ens")
+            return (p3, s3), (loss_mean, comm)
+
+        (p, s), (losses, comms) = lax.scan(
+            body, (population, opt_state), (batches, lrs, keydata, gates)
+        )
+        # per-step comms returned unsummed: the host accumulates in float64
+        # (a float32 chunk sum loses integer exactness past 2^24 scalars,
+        # breaking comm parity with the reference loop at real model scale)
+        return p, s, losses, comms
+
+    f = shard_map(
+        chunk_fn,
+        mesh,
+        in_specs=(pspec, ospec, bspecs, P(), P(), P()),
+        out_specs=(pspec, ospec, P(), P()),
+        check_vma=False,
+    )
+    return jax.jit(f, donate_argnums=(0, 1) if donate else ())
+
+
+def train_population_sharded(
+    key: jax.Array,
+    init_fn: Callable[[jax.Array], PyTree],
+    loss_fn: Callable[[PyTree, Any], jax.Array],
+    data_fn: Callable[[int, int, jax.Array], Any],
+    tcfg: TrainConfig,
+    mcfg: MixingConfig,
+    num_blocks: int,
+    record_every: int = 25,
+    record_fn: Optional[Callable[[int, PyTree], Dict[str, float]]] = None,
+    mesh=None,
+) -> TrainResult:
+    """Drop-in replacement for :func:`repro.train.loop.train_population`
+    running the fused shard_map engine.  Same signature plus an optional
+    ``mesh`` (an ``ens``-axis mesh; default: the host's devices)."""
+    if mcfg.kind in ("wash", "wash_opt") and mcfg.mode != "bucketed":
+        raise ValueError(
+            f"engine='shard_map' only lowers bucketed WASH plans; got "
+            f"mode={mcfg.mode!r}.  Use mode='bucketed' (identical in "
+            f"expectation, Eq. 4) or engine='vmap' for dense plans."
+        )
+    n = tcfg.population
+    if mesh is None:
+        from repro.launch.mesh import make_host_ensemble_mesh
+
+        mesh = make_host_ensemble_mesh(n)
+    m = int(mesh.shape["ens"])
+    assert n % m == 0, f"population {n} must divide over ens axis of size {m}"
+
+    population = pop.init_population(init_fn, key, n, same_init=tcfg.same_init)
+    lids = infer_layer_ids(pop.member(population, 0), num_blocks)
+    tl = total_layers(num_blocks)
+
+    opt_init, opt_update = make_optimizer(
+        tcfg.optimizer, momentum=tcfg.momentum, weight_decay=tcfg.weight_decay
+    )
+    opt_state = jax.vmap(opt_init)(population)
+
+    pspec = jax.tree_util.tree_map(lambda _: P("ens"), population)
+    ospec = jax.tree_util.tree_map(lambda _: P("ens"), opt_state)
+
+    fused = None  # built lazily once the batch pytree structure is known
+
+    def get_fused(batches):
+        nonlocal fused
+        if fused is None:
+            bspecs = jax.tree_util.tree_map(lambda _: P(None, "ens"), batches)
+            fused = make_fused_chunk_fn(
+                mesh, mcfg, lids, tl, opt_update, loss_fn,
+                pspec, ospec, bspecs,
+            )
+        return fused
+
+    history: Dict[str, List[float]] = {
+        "step": [], "loss": [], "consensus": [], "comm": []
+    }
+    comm_total = 0.0
+    base_key = jax.random.fold_in(key, 1234)
+    data_key = jax.random.fold_in(key, 5678)
+
+    t0 = time.time()
+    for start, stop in chunk_ranges(tcfg.total_steps, record_every):
+        steps = range(start, stop)
+        per_step = []
+        for step in steps:
+            dk = jax.random.fold_in(data_key, step)
+            per_step.append(jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[data_fn(mm, step, jax.random.fold_in(dk, mm)) for mm in range(n)],
+            ))
+        batches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_step
+        )
+        lrs = jnp.stack([
+            cosine_lr(s, tcfg.total_steps, tcfg.lr, tcfg.min_lr, tcfg.warmup_steps)
+            for s in steps
+        ])
+        keydata = jnp.stack(
+            [jax.random.key_data(step_key(base_key, s)) for s in steps]
+        )
+        gates = jnp.asarray(
+            [1.0 if mixing_due(s, mcfg) else 0.0 for s in steps], jnp.float32
+        )
+
+        population, opt_state, losses, comms = get_fused(batches)(
+            population, opt_state, batches, lrs, keydata, gates
+        )
+        for c in list(comms):  # per-step float64 adds, as the reference does
+            comm_total += float(c)
+
+        step = stop - 1  # chunk boundary == record boundary
+        history["step"].append(step)
+        history["loss"].append(float(losses[-1]))
+        history["consensus"].append(float(avg_distance_to_consensus(population)))
+        history["comm"].append(comm_total)
+        if record_fn is not None:
+            for k_, v in record_fn(step, population).items():
+                history.setdefault(k_, []).append(v)
+
+    history["wall_s"] = [time.time() - t0]
+    return TrainResult(population, opt_state, history, comm_total)

@@ -47,7 +47,20 @@ def train_population(
     num_blocks: int,
     record_every: int = 25,
     record_fn: Optional[Callable[[int, PyTree], Dict[str, float]]] = None,
+    engine: str = "vmap",
 ) -> TrainResult:
+    """Train a population.  ``engine="vmap"`` is this module's two-jit
+    reference loop; ``engine="shard_map"`` dispatches to the fused
+    single-jit collective engine (:mod:`repro.train.engine`)."""
+    if engine == "shard_map":
+        from repro.train.engine import train_population_sharded
+
+        return train_population_sharded(
+            key, init_fn, loss_fn, data_fn, tcfg, mcfg, num_blocks,
+            record_every=record_every, record_fn=record_fn,
+        )
+    if engine != "vmap":
+        raise ValueError(f"unknown engine {engine!r}")
     n = tcfg.population
     population = pop.init_population(init_fn, key, n, same_init=tcfg.same_init)
     lids = infer_layer_ids(pop.member(population, 0), num_blocks)

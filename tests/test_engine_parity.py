@@ -1,0 +1,184 @@
+"""Fused shard_map engine vs the vmap reference loop.
+
+The fused engine (repro.train.engine) must be a drop-in replacement: same
+populations (bitwise on the 1-device CPU mesh — the collective blocked
+shuffle degenerates to exactly the stacked roll), identical comm
+accounting, identical history schedule, for every mixing mode.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import TrainConfig
+from repro.core.mixing import MixingConfig
+from repro.serving import averaged_params
+from repro.train import train_population
+from repro.train.engine import chunk_ranges, train_population_sharded
+
+KEY = jax.random.key(0)
+
+
+def _init(k):
+    ks = jax.random.split(k, 4)
+    return {
+        "embed": {"w": jax.random.normal(ks[0], (16, 8))},
+        "blocks": [
+            {"w1": jax.random.normal(ks[1], (8, 8))},
+            {"w1": jax.random.normal(ks[2], (8, 8))},
+        ],
+        "head": {"w": jax.random.normal(ks[3], (8, 4))},
+    }
+
+
+def _data_fn(m, step, k):
+    return {
+        "x": jax.random.normal(k, (4, 16)),
+        "y": jax.random.normal(jax.random.fold_in(k, 1), (4, 4)),
+    }
+
+
+def _loss_fn(p, b):
+    h = b["x"] @ p["embed"]["w"]
+    for blk in p["blocks"]:
+        h = jnp.tanh(h @ blk["w1"])
+    return jnp.mean((h @ p["head"]["w"] - b["y"]) ** 2)
+
+
+def _run_pair(kind, optimizer="sgd", steps=13, population=4, **mix_kw):
+    tcfg = TrainConfig(
+        population=population, optimizer=optimizer,
+        lr=0.05 if optimizer == "sgd" else 1e-3,
+        total_steps=steps, batch_size=4,
+    )
+    mcfg = MixingConfig(kind=kind, mode="bucketed", **mix_kw)
+    ref = train_population(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=5
+    )
+    fused = train_population_sharded(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=5
+    )
+    return ref, fused
+
+
+@pytest.mark.parametrize(
+    "kind,kw",
+    [
+        ("wash", dict(base_p=0.5)),
+        ("wash_opt", dict(base_p=0.5)),
+        ("papa", dict(papa_every=5, papa_alpha=0.9)),
+        ("none", dict()),
+    ],
+)
+def test_engines_match_all_mixing_modes(kind, kw):
+    ref, fused = _run_pair(kind, **kw)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ref.population),
+        jax.tree_util.tree_leaves(fused.population),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref.comm_scalars == fused.comm_scalars
+    assert ref.history["step"] == fused.history["step"]
+    np.testing.assert_allclose(
+        ref.history["loss"], fused.history["loss"], rtol=1e-6, atol=1e-7
+    )
+    np.testing.assert_allclose(
+        ref.history["comm"], fused.history["comm"], rtol=0, atol=0
+    )
+    np.testing.assert_allclose(
+        ref.history["consensus"], fused.history["consensus"], rtol=1e-5, atol=1e-6
+    )
+
+
+def test_wash_opt_replays_plan_on_adamw_moments():
+    """WASH+Opt inside the fused step must shuffle mu AND nu with the same
+    plan as the reference (comm triples, moments match bitwise)."""
+    ref, fused = _run_pair("wash_opt", optimizer="adamw", base_p=0.5)
+    for mk in ("mu", "nu"):
+        for a, b in zip(
+            jax.tree_util.tree_leaves(ref.opt_state[mk]),
+            jax.tree_util.tree_leaves(fused.opt_state[mk]),
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    wash_ref, wash_fused = _run_pair("wash", optimizer="adamw", base_p=0.5)
+    assert fused.comm_scalars == 3 * wash_fused.comm_scalars
+    assert ref.comm_scalars == fused.comm_scalars
+
+
+def test_engine_dispatch_via_train_population():
+    """train_population(engine="shard_map") routes to the fused engine."""
+    tcfg = TrainConfig(population=3, optimizer="sgd", lr=0.05, total_steps=6,
+                       batch_size=4)
+    mcfg = MixingConfig(kind="wash", base_p=0.5, mode="bucketed")
+    ref = train_population(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=3
+    )
+    fused = train_population(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=3,
+        engine="shard_map",
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ref.population),
+        jax.tree_util.tree_leaves(fused.population),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    with pytest.raises(ValueError):
+        train_population(
+            KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, engine="nope"
+        )
+
+
+def test_shard_map_engine_rejects_dense_plans():
+    """Dense-mode WASH has no collective lowering: the fused engine must
+    refuse it loudly instead of silently training a different algorithm."""
+    tcfg = TrainConfig(population=2, optimizer="sgd", lr=0.05, total_steps=2,
+                       batch_size=4)
+    dense = MixingConfig(kind="wash", base_p=0.5, mode="dense")
+    with pytest.raises(ValueError, match="bucketed"):
+        train_population_sharded(
+            KEY, _init, _loss_fn, _data_fn, tcfg, dense, 2
+        )
+    # non-WASH kinds don't read mode — dense config is fine there
+    papa = MixingConfig(kind="papa", mode="dense", papa_every=2)
+    train_population_sharded(
+        KEY, _init, _loss_fn, _data_fn, tcfg, papa, 2, record_every=2
+    )
+
+
+def test_serving_consumes_either_engine():
+    """averaged_params must produce the identical soup from both engines'
+    results (TrainResult or bare population)."""
+    ref, fused = _run_pair("wash", base_p=0.5, steps=6)
+    soup_ref = averaged_params(ref)
+    soup_fused = averaged_params(fused.population)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(soup_ref),
+        jax.tree_util.tree_leaves(soup_fused),
+    ):
+        assert a.shape == b.shape  # ens axis averaged away
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_chunk_ranges_cover_and_align():
+    for total, every in [(1, 25), (13, 5), (60, 20), (7, 7), (100, 1)]:
+        chunks = chunk_ranges(total, every)
+        flat = [s for a, b in chunks for s in range(a, b)]
+        assert flat == list(range(total))
+        # every chunk ends on a reference-loop record boundary
+        for _, stop in chunks:
+            s = stop - 1
+            assert s % every == 0 or s == total - 1
+
+
+def test_record_fn_runs_at_boundaries():
+    tcfg = TrainConfig(population=2, optimizer="sgd", lr=0.05, total_steps=7,
+                       batch_size=4)
+    mcfg = MixingConfig(kind="wash", base_p=0.5, mode="bucketed")
+    seen = []
+    res = train_population_sharded(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=3,
+        record_fn=lambda step, pop_: seen.append(step) or {"probe": float(step)},
+    )
+    assert seen == [0, 3, 6] == res.history["step"]
+    assert res.history["probe"] == [0.0, 3.0, 6.0]

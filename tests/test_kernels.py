@@ -5,6 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import shuffle as shf
+from repro.core.consensus import sq_distance_to_consensus
+from repro.core.compat import resolve_interpret
 from repro.kernels import ops, ref
 
 KEY = jax.random.key(0)
@@ -29,6 +32,65 @@ def test_wash_shuffle_kernel(n, d, block_d, dtype):
     out = ops.wash_shuffle(x, perm, mask, block_d=block_d)
     expect = ref.wash_shuffle_ref(x, perm, mask)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+# ---------------------------------------------------------------------------
+# bucketed_shuffle (TPU-native WASH plan as one fused kernel pass)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "n,d,p,block_d",
+    [(2, 100, 0.5, 64),     # tiny
+     (4, 3000, 0.2, 512),   # multi-block grid
+     (5, 517, 0.5, 128),    # d not a multiple of block_d (padding path)
+     (8, 129, 0.9, 128)],   # n buckets ~ d, one ragged tail lane
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bucketed_shuffle_kernel_matches_stacked(n, d, p, block_d, dtype):
+    x = jax.random.normal(KEY, (n, d)).astype(dtype)
+    idx = shf.bucketed_plan(jax.random.fold_in(KEY, 1), d, n, p)
+    assert idx is not None
+    out = ops.bucketed_shuffle(x, idx, block_d=block_d)
+    expect = shf.bucketed_apply_stacked(x, idx)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(expect))
+
+
+def test_bucketed_shuffle_kernel_distance_preserving():
+    """Eq. 5: the kernel's shuffle is an exact per-coordinate permutation,
+    so Σ_n ||θ_n − θ̄||² is bitwise unchanged and every coordinate's
+    multiset of values is preserved across members."""
+    n, d = 5, 1203
+    x = jax.random.normal(KEY, (n, d))
+    idx = shf.bucketed_plan(jax.random.fold_in(KEY, 2), d, n, 0.7)
+    out = ops.bucketed_shuffle(x, idx, block_d=256)
+    np.testing.assert_allclose(
+        float(sq_distance_to_consensus(out)),
+        float(sq_distance_to_consensus(x)),
+        rtol=1e-6,
+    )
+    np.testing.assert_array_equal(
+        np.sort(np.asarray(out), axis=0), np.sort(np.asarray(x), axis=0)
+    )
+
+
+def test_bucketed_shuffle_kernel_bucket0_identity():
+    """Bucket 0's coordinates (and every unselected coordinate) must pass
+    through untouched — that is the paper's (N-1)/N send-volume saving."""
+    n, d = 4, 600
+    x = jax.random.normal(KEY, (n, d))
+    idx = shf.bucketed_plan(jax.random.fold_in(KEY, 3), d, n, 0.3)
+    out = np.asarray(ops.bucketed_shuffle(x, idx, block_d=128))
+    moved = set(np.asarray(idx[1:]).ravel().tolist())
+    untouched = sorted(set(range(d)) - moved)
+    np.testing.assert_array_equal(out[:, untouched], np.asarray(x)[:, untouched])
+
+
+def test_resolve_interpret_auto_detect():
+    assert resolve_interpret(True) is True
+    assert resolve_interpret(False) is False
+    expected = jax.default_backend() != "tpu"
+    assert resolve_interpret(None) is expected
 
 
 # ---------------------------------------------------------------------------
