@@ -33,3 +33,24 @@ def fmt(kv: dict) -> str:
 def print_rows(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def tiny_engine_problem():
+    """Shared model/loss for every engine benchmark row (fused-step,
+    staging, comm-volume), so the rows measure the same workload by
+    construction.  Returns ``(din, dout, init, loss_fn)``."""
+    import jax.numpy as jnp
+
+    din, dh, dout = 64, 128, 8
+
+    def init(k):
+        ks = jax.random.split(k, 3)
+        return {"embed": {"w": jax.random.normal(ks[0], (din, dh)) * 0.1},
+                "blocks": [{"w1": jax.random.normal(ks[1], (dh, dh)) * 0.1}],
+                "head": {"w": jax.random.normal(ks[2], (dh, dout)) * 0.1}}
+
+    def loss_fn(p, b):
+        h = jnp.tanh(b["x"] @ p["embed"]["w"] @ p["blocks"][0]["w1"])
+        return jnp.mean((h @ p["head"]["w"] - b["y"]) ** 2)
+
+    return din, dout, init, loss_fn

@@ -27,7 +27,7 @@ from repro.models import transformer as M
 
 import jax
 
-from benchmarks._util import fmt
+from benchmarks._util import fmt, tiny_engine_problem
 
 PAPA_T = 10
 
@@ -62,9 +62,11 @@ def measured_engine_volume(base_p: float = 0.1, steps: int = 8, n: int = 4):
     """Measured ppermute volume of the fused shard_map engine.
 
     Trains a tiny population with the fused engine and reports the comm
-    accounting its collective path actually recorded (scalars sent per
-    member per step over the ppermute exchanges), next to the exact
-    static expectation Σ_leaves k_per·(N-1) from the same plans.
+    its accounting recorded (exact host-side float64 count of scalars
+    sent per member per step over the ppermute exchanges), next to the
+    static expectation Σ_leaves k_per·(N-1) recomputed from one plan —
+    the two must agree exactly — plus the run's chunk-executable trace
+    count (the padded scheduler compiles each variant once).
     """
     import jax.numpy as jnp
 
@@ -73,30 +75,25 @@ def measured_engine_volume(base_p: float = 0.1, steps: int = 8, n: int = 4):
     from repro.core.layer_index import infer_layer_ids
     from repro.core.mixing import MixingConfig
     from repro.core.schedules import layer_probability  # noqa: F401 (doc link)
+    from repro.train import engine as engine_mod
     from repro.train.engine import train_population_sharded
 
     key = jax.random.key(0)
 
-    def init(k):
-        ks = jax.random.split(k, 3)
-        return {"embed": {"w": jax.random.normal(ks[0], (64, 32))},
-                "blocks": [{"w1": jax.random.normal(ks[1], (32, 32))}],
-                "head": {"w": jax.random.normal(ks[2], (32, 8))}}
+    din, dout, init, loss_fn = tiny_engine_problem()
 
     def data_fn(m, step, k):
-        return {"x": jax.random.normal(k, (4, 64)),
-                "y": jax.random.normal(jax.random.fold_in(k, 1), (4, 8))}
-
-    def loss_fn(p, b):
-        h = jnp.tanh(b["x"] @ p["embed"]["w"] @ p["blocks"][0]["w1"])
-        return jnp.mean((h @ p["head"]["w"] - b["y"]) ** 2)
+        return {"x": jax.random.normal(k, (4, din)),
+                "y": jax.random.normal(jax.random.fold_in(k, 1), (4, dout))}
 
     tcfg = TrainConfig(population=n, optimizer="sgd", lr=0.05,
                        total_steps=steps, batch_size=4)
     mcfg = MixingConfig(kind="wash", base_p=base_p, mode="bucketed")
+    engine_mod.reset_chunk_trace_count()
     res = train_population_sharded(
         key, init, loss_fn, data_fn, tcfg, mcfg, 1, record_every=steps
     )
+    traces = engine_mod.chunk_trace_count()
 
     # exact static expectation from one step's plan (plans are equal-sized
     # every step: k_per depends only on shapes, N, p)
@@ -107,7 +104,7 @@ def measured_engine_volume(base_p: float = 0.1, steps: int = 8, n: int = 4):
     )
     expected_per_step = float(shf.plan_sent_scalars(plan, n, mode="bucketed"))
     measured_per_step = res.comm_scalars / steps
-    return measured_per_step, expected_per_step
+    return measured_per_step, expected_per_step, traces
 
 
 def run(quick: bool = True):
@@ -123,13 +120,14 @@ def run(quick: bool = True):
         ))
 
     # 2. measured ppermute volume of the fused shard_map engine (tiny run)
-    measured, expected = measured_engine_volume()
+    measured, expected, traces = measured_engine_volume()
     rows.append((
         "table1_measured_fused_engine",
         0.0,
         fmt({"sent_scalars_per_member_per_step": measured,
              "static_plan_expectation": expected,
-             "bytes_per_member_per_step_f32": measured * 4}),
+             "bytes_per_member_per_step_f32": measured * 4,
+             "chunk_traces": traces}),
     ))
 
     # 3. HLO-measured bytes from the population dry-runs

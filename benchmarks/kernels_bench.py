@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 
-from benchmarks._util import Row, fmt, time_fn
+from benchmarks._util import Row, fmt, time_fn, tiny_engine_problem
 
 KEY = jax.random.key(0)
 
@@ -39,19 +39,10 @@ def _engine_step_rows(steps: int = 16):
     from repro.optim import make_optimizer
     from repro.train.engine import make_fused_chunk_fn
 
-    n, B, din, dh = 4, 8, 64, 128
+    n, B = 4, 8
+    din, dout, init, loss_fn = tiny_engine_problem()
     mcfg = MixingConfig(kind="wash", base_p=0.1, mode="bucketed")
     key = jax.random.key(0)
-
-    def init(k):
-        ks = jax.random.split(k, 3)
-        return {"embed": {"w": jax.random.normal(ks[0], (din, dh)) * 0.1},
-                "blocks": [{"w1": jax.random.normal(ks[1], (dh, dh)) * 0.1}],
-                "head": {"w": jax.random.normal(ks[2], (dh, 8)) * 0.1}}
-
-    def loss_fn(p, b):
-        h = jnp.tanh(b["x"] @ p["embed"]["w"] @ p["blocks"][0]["w1"])
-        return jnp.mean((h @ p["head"]["w"] - b["y"]) ** 2)
 
     population = pop.init_population(init, key, n, same_init=False)
     lids = infer_layer_ids(pop.member(population, 0), 1)
@@ -61,7 +52,7 @@ def _engine_step_rows(steps: int = 16):
     lr = jnp.float32(0.05)
     batches = {
         "x": jax.random.normal(jax.random.fold_in(key, 1), (steps, n, B, din)),
-        "y": jax.random.normal(jax.random.fold_in(key, 2), (steps, n, B, 8)),
+        "y": jax.random.normal(jax.random.fold_in(key, 2), (steps, n, B, dout)),
     }
     keydata = jnp.stack([
         jax.random.key_data(jax.random.fold_in(key, 100 + t)) for t in range(steps)
@@ -93,6 +84,7 @@ def _engine_step_rows(steps: int = 16):
     # builder; donate=False so timing iterations can reuse their inputs) ---
     mesh = make_host_ensemble_mesh(n)
     lrs = jnp.full((steps,), lr)
+    n_valid = jnp.asarray(steps, jnp.int32)
     pspec = jax.tree_util.tree_map(lambda _: P("ens"), population)
     ospec = jax.tree_util.tree_map(lambda _: P("ens"), opt_state)
     bspec = jax.tree_util.tree_map(lambda _: P(None, "ens"), batches)
@@ -103,7 +95,8 @@ def _engine_step_rows(steps: int = 16):
 
     us_unfused = time_fn(lambda: unfused(population, opt_state), iters=3)
     us_fused = time_fn(
-        lambda: fused(population, opt_state, batches, lrs, keydata, gates),
+        lambda: fused(population, opt_state, batches, lrs, keydata, gates,
+                      n_valid),
         iters=3,
     )
     per_un, per_fu = us_unfused / steps, us_fused / steps
@@ -116,6 +109,60 @@ def _engine_step_rows(steps: int = 16):
     ]
 
 
+def _staging_and_compile_rows(steps: int = 24):
+    """End-to-end fused engine wall clock: double-buffered async staging
+    vs synchronous per-chunk staging, plus the run's compile count (the
+    padded scheduler must trace each variant exactly once)."""
+    import time as _time
+
+    import jax.numpy as jnp
+
+    from repro.configs.base import TrainConfig
+    from repro.core.mixing import MixingConfig
+    from repro.train import engine as engine_mod
+    from repro.train.engine import build_schedule, train_population_sharded
+
+    key = jax.random.key(0)
+    n, B = 4, 8
+    din, dout, init, loss_fn = tiny_engine_problem()
+
+    def data_fn(m, step, k):
+        return {"x": jax.random.normal(k, (B, din)),
+                "y": jax.random.normal(jax.random.fold_in(k, 1), (B, dout))}
+
+    tcfg = TrainConfig(population=n, optimizer="sgd", lr=0.05,
+                       total_steps=steps, batch_size=8)
+    mcfg = MixingConfig(kind="wash", base_p=0.1, mode="bucketed")
+
+    def run(async_staging):
+        engine_mod.reset_chunk_trace_count()
+        t0 = _time.time()
+        train_population_sharded(
+            key, init, loss_fn, data_fn, tcfg, mcfg, 1, record_every=4,
+            async_staging=async_staging,
+        )
+        return (_time.time() - t0) * 1e6, engine_mod.chunk_trace_count()
+
+    run(True)  # warm backend/dispatch state; each run still compiles fresh
+    us_sync, _ = run(False)
+    us_async, traces = run(True)
+    sched = build_schedule(steps, 4, mcfg)
+    variants = len(sched.variants())
+    # CPU caveat: both walls include the per-run compile, and the staging
+    # thread competes with XLA for the same cores here — the overlap pays
+    # off on a real accelerator, where the device executes while the host
+    # stages; this row exists to track the trend and the compile count.
+    return [
+        ("engine_run_sync_staging", us_sync / steps,
+         fmt({"steps": steps, "record_every": 4})),
+        ("engine_run_async_staging", us_async / steps,
+         fmt({"steps": steps, "record_every": 4,
+              "speedup_vs_sync": us_sync / us_async,
+              "chunk_traces": traces, "schedule_variants": variants,
+              "padded_steps": sched.num_padded_steps()})),
+    ]
+
+
 def _write_json(rows):
     os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
     by_name = {name: {"us_per_call": us, "derived": derived}
@@ -124,6 +171,10 @@ def _write_json(rows):
         "rows": by_name,
         "engine_fused_step_us": by_name.get("engine_fused_step", {}).get("us_per_call"),
         "engine_unfused_step_us": by_name.get("engine_unfused_step", {}).get("us_per_call"),
+        "engine_run_sync_staging_us_per_step": by_name.get(
+            "engine_run_sync_staging", {}).get("us_per_call"),
+        "engine_run_async_staging_us_per_step": by_name.get(
+            "engine_run_async_staging", {}).get("us_per_call"),
     }
     with open(JSON_OUT, "w") as f:
         json.dump(report, f, indent=2)
@@ -180,6 +231,7 @@ def run(quick: bool = True):
                  fmt({"ref_us": us_r, "flops": flops})))
 
     rows.extend(_engine_step_rows(steps=8 if quick else 32))
+    rows.extend(_staging_and_compile_rows(steps=24 if quick else 96))
     _write_json(rows)
     return rows
 

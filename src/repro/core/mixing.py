@@ -10,8 +10,13 @@ variant under ``shard_map``).  Implemented strategies:
   papa      EMA pull toward consensus every T steps (PAPA, Eq. 1)
   papa_all  hard averaging every T_all steps (PAPA-all == DART)
 
-All strategies report their communication volume (scalars sent per member
-this step) so paper Table 1 is *measured*, not asserted.
+Communication volume (scalars sent per member per mixing step) feeds the
+paper's Table 1.  The stacked entry points report it per call; the fused
+collective path (:func:`mix_collective_blocked`) does not — bucketed plan
+sizes are static, so both training engines account communication
+host-side in exact float64 via :func:`static_mix_comm` instead of
+carrying a float32 scalar through the jitted step (which truncates past
+2^24 scalars).
 """
 
 from __future__ import annotations
@@ -137,31 +142,64 @@ def mix_stacked(
 
     ``step`` must be a Python int (the period/window tests are static so
     no-mix steps trace to a no-op instead of a masked collective).
+    Delegates the period/window test to :func:`mixing_due` and the op to
+    :func:`mix_once` so the three mixing entry points cannot drift.
     Returns (params, opt_state, scalars_sent_per_member).
     """
-    zero = jnp.zeros((), jnp.float32)
-    if cfg.kind == "none" or not active_window(step, cfg.start_step, cfg.stop_step):
-        return params, opt_state, zero
+    if not mixing_due(step, cfg):
+        return params, opt_state, jnp.zeros((), jnp.float32)
+    return mix_once(key, params, opt_state, cfg, layer_ids, total_layers)
 
-    n = jax.tree_util.tree_leaves(params)[0].shape[0]
-    d = sum(x.size // n for x in jax.tree_util.tree_leaves(params))
 
-    if cfg.kind in ("wash", "wash_opt"):
-        return _wash_step_stacked(key, params, opt_state, cfg, layer_ids, total_layers)
+def static_mix_comm(
+    member_params: PyTree,
+    cfg: MixingConfig,
+    layer_ids: PyTree,
+    total_layers: int,
+    n: int,
+    opt_state: Optional[PyTree] = None,
+) -> Optional[float]:
+    """Exact scalars sent per member on a mixing-due step, computed
+    host-side in float64.
 
-    if cfg.kind == "papa":
-        if step % cfg.papa_every == 0 and step > 0:
-            # all-reduce of every parameter: d scalars per member (paper's
-            # Table 1 accounting; a ring all-reduce is 2d(N-1)/N).
-            return _papa_pull_stacked(params, cfg.papa_alpha), opt_state, zero + float(d)
-        return params, opt_state, zero
+    Bucketed plan sizes are a pure function of shapes/N/p (the key only
+    picks *which* coordinates move), so the count never has to ride a
+    float32 device computation — which truncates past 2^24 scalars, well
+    below real model sizes.  Both training engines use this value for
+    their ``comm`` accounting, accumulating per-step on the host.
 
-    if cfg.kind == "papa_all":
-        if step % cfg.papa_all_every == 0 and step > 0:
-            return _average_stacked(params), opt_state, zero + float(d)
-        return params, opt_state, zero
+    ``member_params`` may be arrays or ``jax.ShapeDtypeStruct`` templates
+    (only shapes are read).  Returns ``None`` when the count is
+    data-dependent (dense WASH draws Bernoulli masks on device); callers
+    then fall back to the device-reported value.
+    """
+    import numpy as np
 
-    raise ValueError(f"unknown mixing kind {cfg.kind!r}")
+    if cfg.kind == "none":
+        return 0.0
+    if cfg.kind in ("papa", "papa_all"):
+        d = sum(
+            int(np.prod(l.shape, dtype=np.int64))
+            for l in jax.tree_util.tree_leaves(member_params)
+        )
+        return float(d)
+    if cfg.mode != "bucketed":
+        return None
+    plan_shapes = jax.eval_shape(lambda: shf.make_plan(
+        jax.random.key(0), member_params, layer_ids, total_layers,
+        cfg.base_p, cfg.schedule, mode="bucketed", n=n,
+    ))
+    sel = sum(
+        int(np.prod(p.shape, dtype=np.int64))
+        for p in jax.tree_util.tree_leaves(
+            plan_shapes, is_leaf=lambda x: x is None
+        )
+        if p is not None
+    )
+    comm = sel * (n - 1) / n
+    if cfg.shuffles_optimizer() and opt_state is not None:
+        comm = comm * (1 + len(momentum_like_leaves(opt_state, member_params)))
+    return comm
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +269,7 @@ def mix_collective_blocked(
     total_layers: int,
     axis_name: str,
     gate: jax.Array,
-) -> Tuple[PyTree, Optional[PyTree], jax.Array]:
+) -> Tuple[PyTree, Optional[PyTree]]:
     """Fused-engine mixing on a *block* of members under shard_map.
 
     ``params`` leaves carry a leading local-ens axis (n_local members per
@@ -240,18 +278,20 @@ def mix_collective_blocked(
 
     ``gate`` is a traced {0,1} scalar — the Python-side :func:`mixing_due`
     result for this step, threaded through ``lax.scan`` — so the collective
-    always executes with static shapes and both the result and the comm
-    accounting are masked.  The WASH plan is built once from the shared key
-    and replayed on the optimizer moments (WASH+Opt), exactly as in the
-    stacked reference.
+    always executes with static shapes and the result is masked.  The WASH
+    plan is built once from the shared key and replayed on the optimizer
+    moments (WASH+Opt), exactly as in the stacked reference.
+
+    Communication is NOT accounted here: plan sizes are static, so the
+    host computes the exact float64 count via :func:`static_mix_comm`
+    instead of carrying a float32 scalar through ``lax.scan`` (which
+    silently truncates past 2^24 scalars per step).
     """
-    zero = jnp.zeros((), jnp.float32)
     if cfg.kind == "none":
-        return params, opt_state, zero
+        return params, opt_state
 
     n_local = jax.tree_util.tree_leaves(params)[0].shape[0]
     n = n_local * axis_size(axis_name)
-    d = sum(x.size // n_local for x in jax.tree_util.tree_leaves(params))
 
     def _gated(new_tree, old_tree):
         return jax.tree_util.tree_map(
@@ -266,15 +306,13 @@ def mix_collective_blocked(
         )
         new_params = shf.apply_plan_collective_blocked(plan, params, axis_name)
         new_opt = opt_state
-        comm = zero + shf.plan_sent_scalars(plan, n, mode="bucketed")
         if cfg.shuffles_optimizer() and opt_state is not None:
             new_opt = dict(opt_state)
             for mk, mv in momentum_like_leaves(opt_state, params).items():
                 new_opt[mk] = _gated(
                     shf.apply_plan_collective_blocked(plan, mv, axis_name), mv
                 )
-                comm = comm + shf.plan_sent_scalars(plan, n, mode="bucketed")
-        return _gated(new_params, params), new_opt, gate * comm
+        return _gated(new_params, params), new_opt
 
     if cfg.kind == "papa":
         pulled = jax.tree_util.tree_map(
@@ -283,7 +321,7 @@ def mix_collective_blocked(
             * lax.pmean(jnp.mean(x, axis=0, keepdims=True), axis_name),
             params,
         )
-        return _gated(pulled, params), opt_state, gate * (zero + float(d))
+        return _gated(pulled, params), opt_state
 
     if cfg.kind == "papa_all":
         avg = jax.tree_util.tree_map(
@@ -292,6 +330,6 @@ def mix_collective_blocked(
             ),
             params,
         )
-        return _gated(avg, params), opt_state, gate * (zero + float(d))
+        return _gated(avg, params), opt_state
 
     raise ValueError(f"unknown mixing kind {cfg.kind!r}")

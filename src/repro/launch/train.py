@@ -47,6 +47,16 @@ def main(argv=None):
                          "single-jit collective engine (forces bucketed "
                          "plans for wash kinds)")
     ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--record-every", type=int, default=None,
+                    help="history record period (default: steps // 10); also "
+                         "the fused engine's chunk window length")
+    ap.add_argument("--sync-staging", action="store_true",
+                    help="shard_map engine: disable the double-buffered "
+                         "staging thread (stage each chunk synchronously)")
+    ap.add_argument("--no-gate-split", action="store_true",
+                    help="shard_map engine: keep one dispatch per record "
+                         "window instead of splitting no-mix gate runs onto "
+                         "the collective-free executable")
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
@@ -85,10 +95,24 @@ def main(argv=None):
               "switching --mode dense -> bucketed")
         mcfg = dataclasses.replace(mcfg, mode="bucketed")
 
+    engine_opts = None
+    if args.engine == "shard_map":
+        engine_opts = {
+            "async_staging": not args.sync_staging,
+            "split_gate_runs": not args.no_gate_split,
+        }
+    elif args.sync_staging or args.no_gate_split:
+        ap.error("--sync-staging/--no-gate-split require --engine shard_map")
+    if args.record_every is not None and args.record_every < 1:
+        ap.error("--record-every must be >= 1")
+    record_every = (
+        args.record_every if args.record_every is not None
+        else max(args.steps // 10, 1)
+    )
     res = train_population(
         key, lambda k: M.init_params(k, cfg), loss_fn, data_fn,
-        tcfg, mcfg, cfg.num_layers, record_every=max(args.steps // 10, 1),
-        engine=args.engine,
+        tcfg, mcfg, cfg.num_layers, record_every=record_every,
+        engine=args.engine, engine_opts=engine_opts,
     )
 
     soup = averaged_params(res)
@@ -103,8 +127,8 @@ def main(argv=None):
     print(f"averaged-model loss    : {float(loss_soup):.4f}")
 
     if args.ckpt:
-        checkpoint.save(args.ckpt, soup)
-        print(f"saved averaged model -> {args.ckpt}")
+        written = checkpoint.save(args.ckpt, soup)
+        print(f"saved averaged model -> {written}")
     if args.history:
         os.makedirs(os.path.dirname(args.history) or ".", exist_ok=True)
         with open(args.history, "w") as f:

@@ -23,9 +23,16 @@ def _flat_paths(tree: PyTree):
     return out
 
 
-def save(path: str, tree: PyTree) -> None:
+def save(path: str, tree: PyTree) -> str:
+    """Write ``tree`` as an npz archive and return the path actually
+    written.  numpy appends ``.npz`` when the suffix is missing, so the
+    path is normalized here — callers report the returned path, never the
+    one they passed in."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     np.savez(path, **_flat_paths(tree))
+    return path
 
 
 def restore(path: str, like: PyTree) -> PyTree:

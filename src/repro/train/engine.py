@@ -1,4 +1,4 @@
-"""Fused shard_map training engine: one donated jit per record window.
+"""Fused shard_map training engine: one donated jit per schedule chunk.
 
 The reference loop (:mod:`repro.train.loop`) dispatches two separate jits
 per step (optimizer update, then mixing) from a Python loop, so the WASH
@@ -12,13 +12,26 @@ This engine runs the whole train+mix step as ONE donated jit under
   * WASH shuffles travel over the real ``ppermute`` path
     (:func:`repro.core.shuffle.bucketed_apply_collective_blocked`) and
     PAPA pulls over ``pmean``, instead of the stacked gather,
-  * ``lax.scan`` chunks every step between two ``record_every`` boundaries
-    into a single dispatch, so the host is only re-entered where the
-    reference loop would have synced anyway,
+  * ``lax.scan`` runs each chunk of the host-side dispatch plan
+    (:mod:`repro.train.schedule`) in a single dispatch.  Chunks are padded
+    to one fixed scan length per compiled variant and split along
+    ``mixing_due`` gate runs, so the engine traces **at most two**
+    executables per run (one collective, one collective-free) no matter
+    how ``(total_steps, record_every)`` fall — and exactly one when the
+    gates never change inside a record window (WASH, ``none``),
   * the mixing schedule (:func:`repro.core.mixing.mixing_due` per step) is
-    threaded through the scan as a static-shaped gate vector, and the WASH
-    plan is built once per step from the shared key and replayed on the
-    optimizer moments (WASH+Opt) inside the fused step.
+    threaded through the fused loop as a static-shaped gate vector, the
+    per-step ``valid`` mask lowers to the loop's traced trip count (pad
+    slots sit past it and never execute), and the WASH plan is built once
+    per step from the shared key and replayed on the optimizer moments
+    (WASH+Opt) inside the fused step,
+  * batches for chunk k+1 are stacked and ``device_put`` on a staging
+    thread while chunk k executes (double buffering), instead of PR 1's
+    synchronous per-chunk host loop,
+  * communication is accounted host-side in exact float64 from the static
+    plan sizes (:func:`repro.core.mixing.static_mix_comm`) — a float32
+    scalar carried through ``lax.scan`` truncates past 2^24 scalars per
+    step, far below real model sizes.
 
 WASH kinds always use the ``bucketed`` plan mode here (the dense mode has
 no collective lowering); everything else — init, data order, key
@@ -29,11 +42,13 @@ loop exactly, which `tests/test_engine_parity.py` asserts.
 from __future__ import annotations
 
 import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 from jax import lax
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import TrainConfig
@@ -41,31 +56,36 @@ from repro.core import population as pop
 from repro.core.compat import shard_map
 from repro.core.consensus import avg_distance_to_consensus
 from repro.core.layer_index import infer_layer_ids, total_layers
-from repro.core.mixing import MixingConfig, mix_collective_blocked, mixing_due
+from repro.core.mixing import (
+    MixingConfig,
+    mix_collective_blocked,
+    static_mix_comm,
+)
 from repro.core.prng import step_key
 from repro.optim import cosine_lr, make_optimizer
 from repro.train.loop import TrainResult
+from repro.train.schedule import (  # noqa: F401  (re-exported API)
+    ChunkPlan,
+    Schedule,
+    build_schedule,
+    chunk_ranges,
+    record_boundaries,
+)
 
 PyTree = Any
 
-
-def record_boundaries(total_steps: int, record_every: int) -> List[int]:
-    """Steps at which the reference loop records (its host-sync points)."""
-    return [
-        s for s in range(total_steps)
-        if s % record_every == 0 or s == total_steps - 1
-    ]
+# Counts traces of the fused chunk body (shard_map+jit trace the Python
+# body exactly once per compiled executable, so this IS the compile count;
+# asserted ≤ 2 per run by tests/test_schedule.py).
+_CHUNK_TRACES = [0]
 
 
-def chunk_ranges(total_steps: int, record_every: int):
-    """``[(start, stop))`` chunks covering ``range(total_steps)``, each
-    ending on a record boundary, so the fused scan only returns to the host
-    where the reference loop would have synced anyway."""
-    out, start = [], 0
-    for b in record_boundaries(total_steps, record_every):
-        out.append((start, b + 1))
-        start = b + 1
-    return out
+def reset_chunk_trace_count() -> None:
+    _CHUNK_TRACES[0] = 0
+
+
+def chunk_trace_count() -> int:
+    return _CHUNK_TRACES[0]
 
 
 def make_fused_chunk_fn(
@@ -79,18 +99,40 @@ def make_fused_chunk_fn(
     ospec: PyTree,
     bspecs: PyTree,
     *,
+    with_mixing: bool = True,
     donate: bool = True,
 ):
     """Build the engine's fused chunk dispatch: one donated jit scanning
     (per-member update → gated collective mix) over a chunk of steps under
-    shard_map.  Exposed so benchmarks time the SHIPPED engine body rather
-    than a copy (``benchmarks/kernels_bench.py``; pass ``donate=False``
-    there so repeated timing calls can reuse their inputs)."""
+    shard_map.  ``with_mixing=False`` builds the collective-free variant
+    dispatched on no-mix gate runs (the only other executable the engine
+    ever compiles).  Exposed so benchmarks time the SHIPPED engine body
+    rather than a copy (``benchmarks/kernels_bench.py``; pass
+    ``donate=False`` there so repeated timing calls can reuse inputs)."""
 
-    def chunk_fn(population, opt_state, batches, lrs, keydata, gates):
-        def body(carry, xs):
-            p, s = carry
-            batch, lr, kd, gate = xs
+    def chunk_fn(population, opt_state, batches, lrs, keydata, gates, n_valid):
+        _CHUNK_TRACES[0] += 1
+
+        # the loss rides the fori_loop carry, whose dtype is fixed up
+        # front — derive it from loss_fn so non-f32 losses (x64, bf16)
+        # keep working like they did under lax.scan's unconstrained ys
+        loss_sds = jax.eval_shape(
+            loss_fn,
+            jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
+                population,
+            ),
+            jax.tree_util.tree_map(
+                lambda x: jax.ShapeDtypeStruct(x.shape[2:], x.dtype), batches
+            ),
+        )
+
+        def body(i, carry):
+            p, s, _ = carry
+            batch, lr, kd, gate = jax.tree_util.tree_map(
+                lambda x: lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+                (batches, lrs, keydata, gates),
+            )
 
             def one(pm, sm, bm):
                 loss, g = jax.value_and_grad(loss_fn)(pm, bm)
@@ -98,26 +140,44 @@ def make_fused_chunk_fn(
                 return p2, s2, loss
 
             p2, s2, losses = jax.vmap(one)(p, s, batch)
-            k = jax.random.wrap_key_data(kd)
-            p3, s3, comm = mix_collective_blocked(
-                k, p2, s2, mcfg, layer_ids, tl, "ens", gate
-            )
-            loss_mean = lax.pmean(jnp.mean(losses), "ens")
-            return (p3, s3), (loss_mean, comm)
 
-        (p, s), (losses, comms) = lax.scan(
-            body, (population, opt_state), (batches, lrs, keydata, gates)
+            if with_mixing:
+                k = jax.random.wrap_key_data(kd)
+                p3, s3 = mix_collective_blocked(
+                    k, p2, s2, mcfg, layer_ids, tl, "ens", gate
+                )
+            else:
+                p3, s3 = p2, s2
+            loss_mean = lax.pmean(jnp.mean(losses), "ens")
+            if loss_mean.dtype != loss_sds.dtype or getattr(
+                loss_mean.aval, "weak_type", False
+            ):
+                # normalize odd loss dtypes so the carry signature is
+                # stable; trace-time check keeps the common path's graph
+                # free of an extra convert
+                loss_mean = loss_mean.astype(loss_sds.dtype)
+            return (p3, s3, loss_mean)
+
+        # A bounded fori_loop, not lax.scan: inputs are padded to the
+        # variant's fixed length but pad slots NEVER execute — the traced
+        # trip count stops the loop after the chunk's real steps.  This
+        # keeps one compile per variant without select-masking the
+        # optimizer update (a masking `where` changes XLA's fusion of the
+        # update arithmetic by ~1ulp, breaking the bitwise-parity
+        # contract) and spends zero FLOPs on pad slots.  lax.scan lowers
+        # to the same while+dynamic-slice structure, so the executed
+        # per-step dataflow is unchanged.
+        p, s, loss_last = lax.fori_loop(
+            0, n_valid, body,
+            (population, opt_state, jnp.zeros((), loss_sds.dtype)),
         )
-        # per-step comms returned unsummed: the host accumulates in float64
-        # (a float32 chunk sum loses integer exactness past 2^24 scalars,
-        # breaking comm parity with the reference loop at real model scale)
-        return p, s, losses, comms
+        return p, s, loss_last
 
     f = shard_map(
         chunk_fn,
         mesh,
-        in_specs=(pspec, ospec, bspecs, P(), P(), P()),
-        out_specs=(pspec, ospec, P(), P()),
+        in_specs=(pspec, ospec, bspecs, P(), P(), P(), P()),
+        out_specs=(pspec, ospec, P()),
         check_vma=False,
     )
     return jax.jit(f, donate_argnums=(0, 1) if donate else ())
@@ -134,10 +194,16 @@ def train_population_sharded(
     record_every: int = 25,
     record_fn: Optional[Callable[[int, PyTree], Dict[str, float]]] = None,
     mesh=None,
+    async_staging: bool = True,
+    split_gate_runs: bool = True,
 ) -> TrainResult:
     """Drop-in replacement for :func:`repro.train.loop.train_population`
     running the fused shard_map engine.  Same signature plus an optional
-    ``mesh`` (an ``ens``-axis mesh; default: the host's devices)."""
+    ``mesh`` (an ``ens``-axis mesh; default: the host's devices),
+    ``async_staging`` (double-buffer chunk k+1's batches on a staging
+    thread while chunk k executes) and ``split_gate_runs`` (dispatch
+    no-mix spans on the collective-free executable; see
+    :mod:`repro.train.schedule`)."""
     if mcfg.kind in ("wash", "wash_opt") and mcfg.mode != "bucketed":
         raise ValueError(
             f"engine='shard_map' only lowers bucketed WASH plans; got "
@@ -164,63 +230,119 @@ def train_population_sharded(
     pspec = jax.tree_util.tree_map(lambda _: P("ens"), population)
     ospec = jax.tree_util.tree_map(lambda _: P("ens"), opt_state)
 
-    fused = None  # built lazily once the batch pytree structure is known
+    # exact per-mix-step comm from the static plan sizes (member template:
+    # shapes only, no data copy); never None here — dense WASH was rejected
+    member_tpl = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), population
+    )
+    comm_per_mix_step = static_mix_comm(
+        member_tpl, mcfg, lids, tl, n, opt_state=opt_state
+    )
+    assert comm_per_mix_step is not None
 
-    def get_fused(batches):
-        nonlocal fused
-        if fused is None:
+    sched = build_schedule(
+        tcfg.total_steps, record_every, mcfg, split_gate_runs=split_gate_runs
+    )
+
+    fused: Dict[bool, Callable] = {}  # variant (with_mixing) -> donated jit
+
+    def get_fused(chunk: ChunkPlan, batches):
+        if chunk.mixing not in fused:
             bspecs = jax.tree_util.tree_map(lambda _: P(None, "ens"), batches)
-            fused = make_fused_chunk_fn(
+            fused[chunk.mixing] = make_fused_chunk_fn(
                 mesh, mcfg, lids, tl, opt_update, loss_fn,
-                pspec, ospec, bspecs,
+                pspec, ospec, bspecs, with_mixing=chunk.mixing,
             )
-        return fused
+        return fused[chunk.mixing]
+
+    base_key = jax.random.fold_in(key, 1234)
+    data_key = jax.random.fold_in(key, 5678)
+    rep_sharding = NamedSharding(mesh, P())
+
+    def stage(chunk: ChunkPlan):
+        """Stack a chunk's inputs, pad to the variant's fixed scan length
+        (pad slots replicate the last real step; they sit past the fused
+        loop's trip count and never execute), and start the device
+        transfers.  Runs on the staging thread."""
+        steps = list(chunk.steps)
+        member_batches = []
+        for step in steps:
+            dk = jax.random.fold_in(data_key, step)
+            member_batches += [
+                data_fn(mm, step, jax.random.fold_in(dk, mm)) for mm in range(n)
+            ]
+        member_batches += member_batches[-n:] * chunk.pad
+        # one stack per leaf for the whole (pad_len, n, ...) block — not a
+        # stack per step then per chunk.  data_fn outputs live on device
+        # (jax.random), so host-side np.stack would force a sync instead
+        # of saving one; the single device stack keeps staging dispatches
+        # at one per leaf.
+        batches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs).reshape(
+                (chunk.pad_len, n) + xs[0].shape
+            ),
+            *member_batches,
+        )
+        lr_list = [
+            cosine_lr(s, tcfg.total_steps, tcfg.lr, tcfg.min_lr, tcfg.warmup_steps)
+            for s in steps
+        ]
+        lrs = jnp.stack(lr_list + [lr_list[-1]] * chunk.pad)
+        kd_list = [jax.random.key_data(step_key(base_key, s)) for s in steps]
+        keydata = jnp.stack(kd_list + [kd_list[-1]] * chunk.pad)
+        gates = jnp.asarray(chunk.padded_gates(), jnp.float32)
+        # trip count of the fused fori_loop: pad slots past it never execute
+        n_valid = jnp.asarray(chunk.length, jnp.int32)
+
+        batches = jax.device_put(batches, jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P(None, "ens")), batches
+        ))
+        lrs, keydata, gates, n_valid = jax.device_put(
+            (lrs, keydata, gates, n_valid), rep_sharding
+        )
+        return batches, lrs, keydata, gates, n_valid
 
     history: Dict[str, List[float]] = {
         "step": [], "loss": [], "consensus": [], "comm": []
     }
     comm_total = 0.0
-    base_key = jax.random.fold_in(key, 1234)
-    data_key = jax.random.fold_in(key, 5678)
+    chunks = sched.chunks
+    executor = (
+        ThreadPoolExecutor(max_workers=1, thread_name_prefix="wash-stage")
+        if async_staging and len(chunks) > 1 else None
+    )
 
     t0 = time.time()
-    for start, stop in chunk_ranges(tcfg.total_steps, record_every):
-        steps = range(start, stop)
-        per_step = []
-        for step in steps:
-            dk = jax.random.fold_in(data_key, step)
-            per_step.append(jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs),
-                *[data_fn(mm, step, jax.random.fold_in(dk, mm)) for mm in range(n)],
-            ))
-        batches = jax.tree_util.tree_map(
-            lambda *xs: jnp.stack(xs), *per_step
-        )
-        lrs = jnp.stack([
-            cosine_lr(s, tcfg.total_steps, tcfg.lr, tcfg.min_lr, tcfg.warmup_steps)
-            for s in steps
-        ])
-        keydata = jnp.stack(
-            [jax.random.key_data(step_key(base_key, s)) for s in steps]
-        )
-        gates = jnp.asarray(
-            [1.0 if mixing_due(s, mcfg) else 0.0 for s in steps], jnp.float32
-        )
+    try:
+        nxt = executor.submit(stage, chunks[0]) if executor else None
+        for i, chunk in enumerate(chunks):
+            staged = nxt.result() if executor else stage(chunk)
+            if executor and i + 1 < len(chunks):
+                # double buffering: the staging thread builds chunk i+1's
+                # inputs while the devices execute chunk i
+                nxt = executor.submit(stage, chunks[i + 1])
 
-        population, opt_state, losses, comms = get_fused(batches)(
-            population, opt_state, batches, lrs, keydata, gates
-        )
-        for c in list(comms):  # per-step float64 adds, as the reference does
-            comm_total += float(c)
+            population, opt_state, loss_last = get_fused(chunk, staged[0])(
+                population, opt_state, *staged
+            )
+            for g in chunk.gates:  # per-step float64 adds, as the reference
+                if g:
+                    comm_total += comm_per_mix_step
 
-        step = stop - 1  # chunk boundary == record boundary
-        history["step"].append(step)
-        history["loss"].append(float(losses[-1]))
-        history["consensus"].append(float(avg_distance_to_consensus(population)))
-        history["comm"].append(comm_total)
-        if record_fn is not None:
-            for k_, v in record_fn(step, population).items():
-                history.setdefault(k_, []).append(v)
+            if chunk.record:
+                step = chunk.stop - 1  # chunk boundary == record boundary
+                history["step"].append(step)
+                history["loss"].append(float(loss_last))
+                history["consensus"].append(
+                    float(avg_distance_to_consensus(population))
+                )
+                history["comm"].append(comm_total)
+                if record_fn is not None:
+                    for k_, v in record_fn(step, population).items():
+                        history.setdefault(k_, []).append(v)
+    finally:
+        if executor is not None:
+            executor.shutdown(wait=True)
 
     history["wall_s"] = [time.time() - t0]
     return TrainResult(population, opt_state, history, comm_total)

@@ -22,7 +22,7 @@ from repro.configs.base import TrainConfig
 from repro.core import population as pop
 from repro.core.consensus import avg_distance_to_consensus
 from repro.core.layer_index import infer_layer_ids, total_layers
-from repro.core.mixing import MixingConfig, mix_once, mixing_due
+from repro.core.mixing import MixingConfig, mix_once, mixing_due, static_mix_comm
 from repro.core.prng import step_key
 from repro.optim import cosine_lr, make_optimizer
 
@@ -48,19 +48,34 @@ def train_population(
     record_every: int = 25,
     record_fn: Optional[Callable[[int, PyTree], Dict[str, float]]] = None,
     engine: str = "vmap",
+    mesh=None,
+    engine_opts: Optional[Dict[str, Any]] = None,
 ) -> TrainResult:
     """Train a population.  ``engine="vmap"`` is this module's two-jit
     reference loop; ``engine="shard_map"`` dispatches to the fused
-    single-jit collective engine (:mod:`repro.train.engine`)."""
+    single-jit collective engine (:mod:`repro.train.engine`), which also
+    receives ``mesh`` (an ``ens``-axis mesh) and any ``engine_opts``
+    (e.g. ``async_staging``/``split_gate_runs``)."""
     if engine == "shard_map":
         from repro.train.engine import train_population_sharded
 
         return train_population_sharded(
             key, init_fn, loss_fn, data_fn, tcfg, mcfg, num_blocks,
-            record_every=record_every, record_fn=record_fn,
+            record_every=record_every, record_fn=record_fn, mesh=mesh,
+            **(engine_opts or {}),
         )
     if engine != "vmap":
         raise ValueError(f"unknown engine {engine!r}")
+    if mesh is not None:
+        raise ValueError(
+            "mesh= is only consumed by engine='shard_map'; the vmap "
+            "reference loop runs on the default device"
+        )
+    if engine_opts:
+        raise ValueError(
+            f"engine_opts={sorted(engine_opts)} are only consumed by "
+            "engine='shard_map'"
+        )
     n = tcfg.population
     population = pop.init_population(init_fn, key, n, same_init=tcfg.same_init)
     lids = infer_layer_ids(pop.member(population, 0), num_blocks)
@@ -85,8 +100,17 @@ def train_population(
     def mix_step(population, opt_state, k):
         return mix_once(k, population, opt_state, mcfg, lids, tl)
 
+    # exact float64 comm per mixing step from the static plan sizes; None
+    # for dense WASH (data-dependent Bernoulli masks → use the device value)
+    member_tpl = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), population
+    )
+    static_comm = static_mix_comm(
+        member_tpl, mcfg, lids, tl, n, opt_state=opt_state
+    )
+
     history: Dict[str, List[float]] = {
-        "step": [], "loss": [], "consensus": [], "comm": [], **({} if record_fn is None else {})
+        "step": [], "loss": [], "consensus": [], "comm": []
     }
     comm_total = 0.0
     base_key = jax.random.fold_in(key, 1234)
@@ -106,7 +130,7 @@ def train_population(
             population, opt_state, comm = mix_step(
                 population, opt_state, step_key(base_key, step)
             )
-            comm_total += float(comm)
+            comm_total += float(comm) if static_comm is None else static_comm
 
         if step % record_every == 0 or step == tcfg.total_steps - 1:
             history["step"].append(step)

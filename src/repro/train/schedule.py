@@ -1,0 +1,167 @@
+"""Chunk scheduler for the fused shard_map engine.
+
+The engine dispatches one fused jit per *chunk* of steps.  PR 1 cut chunks
+at ``record_every`` boundaries only, which left two costs on the table:
+
+  * chunk lengths varied (1 / ``record_every`` / ragged tail), so the
+    donated jit recompiled for up to three scan lengths per run — minutes
+    of wasted XLA time each at real model scale;
+  * the gated collective still executed ``ppermute``/``pmean`` on steps
+    where :func:`repro.core.mixing.mixing_due` is False (cheap for WASH,
+    which mixes every step, but wasteful for PAPA with a large period T —
+    exactly the overhead the paper criticizes PAPA-style methods for).
+
+This module plans the whole run up front, host-side, from the three
+static inputs ``(total_steps, record_every, mcfg)``:
+
+  1. **Record windows** (:func:`chunk_ranges`) cut at the reference loop's
+     host-sync points, exactly as before.
+  2. **Gate-run splitting**: each window is split along maximal runs of
+     equal ``mixing_due`` value, so no-mix spans dispatch on a
+     collective-free executable.  WASH (mixing every step) keeps its
+     single dispatch per window; ``none`` collapses to one collective-free
+     dispatch per window; PAPA alternates between the two variants.
+  3. **Fixed pad lengths**: every chunk of a variant is padded to that
+     variant's maximum run length, so each variant compiles **exactly
+     once** — at most two traces per run, one when no gate-split applies.
+     The per-slot valid mask (1 on real steps, 0 on pads —
+     :meth:`ChunkPlan.padded_valid`) is always a prefix of ones, so the
+     engine lowers it to the traced trip count of its fused
+     ``fori_loop``: pad slots sit past the bound and never execute, which
+     keeps the executed per-step dataflow identical to the unpadded scan
+     (bitwise parity) and spends zero FLOPs on padding.
+
+Only the *last* chunk of each record window carries ``record=True``; the
+host reads losses/consensus there, so the history schedule stays
+identical to the reference loop's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.core.mixing import MixingConfig, mixing_due
+
+
+def record_boundaries(total_steps: int, record_every: int) -> List[int]:
+    """Steps at which the reference loop records (its host-sync points)."""
+    return [
+        s for s in range(total_steps)
+        if s % record_every == 0 or s == total_steps - 1
+    ]
+
+
+def chunk_ranges(total_steps: int, record_every: int) -> List[Tuple[int, int]]:
+    """``[(start, stop))`` chunks covering ``range(total_steps)``, each
+    ending on a record boundary, so the fused scan only returns to the host
+    where the reference loop would have synced anyway."""
+    out, start = [], 0
+    for b in record_boundaries(total_steps, record_every):
+        out.append((start, b + 1))
+        start = b + 1
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class ChunkPlan:
+    """One fused dispatch: steps ``[start, stop)`` padded to ``pad_len``.
+
+    ``gates`` holds the per-real-step ``mixing_due`` results; ``mixing``
+    selects the compiled variant (collective vs collective-free) and is
+    True iff any gate is set.  ``record`` marks the chunk whose last real
+    step is a reference-loop record boundary.
+    """
+
+    start: int
+    stop: int
+    gates: Tuple[bool, ...]
+    mixing: bool
+    record: bool
+    pad_len: int
+
+    @property
+    def length(self) -> int:
+        return self.stop - self.start
+
+    @property
+    def steps(self) -> range:
+        return range(self.start, self.stop)
+
+    @property
+    def pad(self) -> int:
+        return self.pad_len - self.length
+
+    def padded_gates(self) -> List[float]:
+        """Gate vector for the scan: mixing_due per real step, 0 on pads."""
+        return [1.0 if g else 0.0 for g in self.gates] + [0.0] * self.pad
+
+    def padded_valid(self) -> List[float]:
+        """Per-slot valid mask: 1 on real steps, 0 on pad slots.  Always
+        a ones-prefix, which is why the engine encodes it as the fused
+        loop's trip count (``chunk.length``) rather than a select mask."""
+        return [1.0] * self.length + [0.0] * self.pad
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """The run's full dispatch plan (host-side, static)."""
+
+    chunks: Tuple[ChunkPlan, ...]
+    mix_pad_len: int    # scan length of the collective variant (0 if unused)
+    nomix_pad_len: int  # scan length of the collective-free variant (0 if unused)
+
+    def variants(self) -> Tuple[bool, ...]:
+        """Distinct executables this schedule dispatches (≤ 2)."""
+        return tuple(sorted({c.mixing for c in self.chunks}))
+
+    def num_padded_steps(self) -> int:
+        return sum(c.pad for c in self.chunks)
+
+
+def _gate_runs(
+    wstart: int, wstop: int, gates: List[bool]
+) -> List[Tuple[int, int]]:
+    """Maximal ``[start, stop)`` runs of equal gate value inside a window."""
+    runs, rs = [], wstart
+    for s in range(wstart + 1, wstop):
+        if gates[s - wstart] != gates[rs - wstart]:
+            runs.append((rs, s))
+            rs = s
+    runs.append((rs, wstop))
+    return runs
+
+
+def build_schedule(
+    total_steps: int,
+    record_every: int,
+    mcfg: MixingConfig,
+    *,
+    split_gate_runs: bool = True,
+) -> Schedule:
+    """Plan every fused dispatch for a run.
+
+    ``split_gate_runs=False`` keeps PR 1's one-dispatch-per-window shape
+    (useful for A/B benchmarks); chunks whose window mixes anywhere then
+    dispatch on the collective variant with their inner gates zeroed on
+    no-mix steps.  Either way, chunk lengths are padded so each variant
+    compiles exactly once.
+    """
+    raw = []  # (start, stop, gates, mixing, record)
+    for wstart, wstop in chunk_ranges(total_steps, record_every):
+        gates = [mixing_due(s, mcfg) for s in range(wstart, wstop)]
+        if split_gate_runs:
+            pieces = _gate_runs(wstart, wstop, gates)
+        else:
+            pieces = [(wstart, wstop)]
+        for a, b in pieces:
+            g = tuple(gates[a - wstart:b - wstart])
+            raw.append((a, b, g, any(g), b == wstop))
+
+    mix_pad = max((b - a for a, b, _, mix, _ in raw if mix), default=0)
+    nomix_pad = max((b - a for a, b, _, mix, _ in raw if not mix), default=0)
+    chunks = tuple(
+        ChunkPlan(a, b, g, mix, rec, mix_pad if mix else nomix_pad)
+        for a, b, g, mix, rec in raw
+    )
+    return Schedule(chunks, mix_pad, nomix_pad)

@@ -1,4 +1,5 @@
 import jax
+import jax.numpy as jnp
 import pytest
 
 # Smoke tests and benches see the single real CPU device; only the dry-run
@@ -9,3 +10,35 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.key(0)
+
+
+# Shared tiny-population problem for the engine parity suites
+# (tests/test_engine_parity.py and tests/test_schedule.py assert the fused
+# engine against the reference loop on the SAME model/data/loss, so the
+# two suites cannot drift apart).
+
+
+def tiny_init(k):
+    ks = jax.random.split(k, 4)
+    return {
+        "embed": {"w": jax.random.normal(ks[0], (16, 8))},
+        "blocks": [
+            {"w1": jax.random.normal(ks[1], (8, 8))},
+            {"w1": jax.random.normal(ks[2], (8, 8))},
+        ],
+        "head": {"w": jax.random.normal(ks[3], (8, 4))},
+    }
+
+
+def tiny_data_fn(m, step, k):
+    return {
+        "x": jax.random.normal(k, (4, 16)),
+        "y": jax.random.normal(jax.random.fold_in(k, 1), (4, 4)),
+    }
+
+
+def tiny_loss_fn(p, b):
+    h = b["x"] @ p["embed"]["w"]
+    for blk in p["blocks"]:
+        h = jnp.tanh(h @ blk["w1"])
+    return jnp.mean((h @ p["head"]["w"] - b["y"]) ** 2)

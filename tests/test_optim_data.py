@@ -93,8 +93,34 @@ def test_checkpoint_roundtrip(tmp_path):
         "blocks": [{"w": jnp.ones((2, 2))}, {"w": jnp.zeros((2, 2))}],
     }
     path = os.path.join(tmp_path, "ckpt.npz")
-    checkpoint.save(path, tree)
+    written = checkpoint.save(path, tree)
+    assert written == path  # already suffixed: unchanged
     like = jax.tree_util.tree_map(jnp.zeros_like, tree)
     back = checkpoint.restore(path, like)
     for a, b in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_suffixless_path_roundtrip(tmp_path):
+    """save() must report the file numpy actually wrote (<path>.npz) —
+    callers printed the bare path before — and restore must accept both
+    spellings, including list-indexed pytree paths (blocks[0], blocks[1])."""
+    tree = {
+        "blocks": [
+            {"w": jax.random.normal(KEY, (3, 2))},
+            {"w": jax.random.normal(jax.random.fold_in(KEY, 1), (3, 2))},
+        ],
+        "head": {"b": jnp.arange(4.0)},
+    }
+    bare = os.path.join(tmp_path, "soup")
+    written = checkpoint.save(bare, tree)
+    assert written == bare + ".npz"
+    assert os.path.exists(written)
+    assert not os.path.exists(bare)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    for p in (written, bare):  # suffixed and suffix-less spellings
+        back = checkpoint.restore(p, like)
+        for a, b in zip(
+            jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(back)
+        ):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

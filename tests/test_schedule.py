@@ -1,0 +1,220 @@
+"""Chunk scheduler (repro.train.schedule) + the fused engine's
+single-compile contract.
+
+The scheduler plans every fused dispatch host-side: record-window chunks
+split along mixing_due gate runs, padded to one fixed scan length per
+compiled variant.  The engine must trace its chunk executable at most
+twice per run (once when no gate-split applies) and stay bitwise-equal to
+the vmap reference loop for every mixing kind under padding + splitting.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from conftest import tiny_data_fn as _data_fn
+from conftest import tiny_init as _init
+from conftest import tiny_loss_fn as _loss_fn
+from repro.configs.base import TrainConfig
+from repro.core.mixing import MixingConfig, mixing_due
+from repro.train import train_population
+from repro.train import engine as engine_mod
+from repro.train.engine import train_population_sharded
+from repro.train.schedule import build_schedule, chunk_ranges, record_boundaries
+
+KEY = jax.random.key(0)
+
+
+# ---------------------------------------------------------------------------
+# boundaries / ranges edge cases
+# ---------------------------------------------------------------------------
+
+
+def test_record_boundaries_edge_cases():
+    assert record_boundaries(1, 25) == [0]          # total_steps=1
+    assert record_boundaries(5, 1) == [0, 1, 2, 3, 4]  # record_every=1
+    assert record_boundaries(3, 10) == [0, 2]       # record_every > total
+    assert record_boundaries(10, 5) == [0, 5, 9]
+
+
+def test_chunk_ranges_edge_cases():
+    assert chunk_ranges(1, 25) == [(0, 1)]
+    assert chunk_ranges(5, 1) == [(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]
+    assert chunk_ranges(3, 10) == [(0, 1), (1, 3)]
+    for total, every in [(1, 1), (13, 5), (60, 20), (7, 7), (100, 1)]:
+        flat = [s for a, b in chunk_ranges(total, every) for s in range(a, b)]
+        assert flat == list(range(total))
+
+
+# ---------------------------------------------------------------------------
+# build_schedule
+# ---------------------------------------------------------------------------
+
+
+def _check_schedule_invariants(sched, total_steps, record_every, mcfg):
+    chunks = sched.chunks
+    # full coverage, in order
+    flat = [s for c in chunks for s in c.steps]
+    assert flat == list(range(total_steps))
+    # gates are the per-step mixing_due results
+    for c in chunks:
+        assert c.gates == tuple(mixing_due(s, mcfg) for s in c.steps)
+        assert c.mixing == any(c.gates)
+        # one fixed pad length per variant
+        assert c.pad_len == (sched.mix_pad_len if c.mixing
+                             else sched.nomix_pad_len)
+        assert c.pad >= 0
+        assert len(c.padded_gates()) == len(c.padded_valid()) == c.pad_len
+        assert sum(c.padded_valid()) == c.length
+    # record chunks reproduce the reference loop's history schedule
+    rec = [c.stop - 1 for c in chunks if c.record]
+    assert rec == record_boundaries(total_steps, record_every)
+    assert len(sched.variants()) <= 2
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("wash", dict(base_p=0.5)),
+    ("papa", dict(papa_every=10)),
+    ("papa_all", dict(papa_all_every=7)),
+    ("none", dict()),
+])
+@pytest.mark.parametrize("total,every", [
+    (1, 25),      # total_steps=1
+    (9, 1),       # record_every=1
+    (3, 10),      # record_every > total_steps
+    (60, 25),
+])
+def test_build_schedule_invariants(kind, kw, total, every):
+    mcfg = MixingConfig(kind=kind, mode="bucketed", **kw)
+    sched = build_schedule(total, every, mcfg)
+    _check_schedule_invariants(sched, total, every, mcfg)
+
+
+def test_gate_run_splitting_produces_both_variants():
+    """PAPA with T=10 inside 25-step record windows: no-mix spans land on
+    the collective-free variant, each mix step on the collective one."""
+    mcfg = MixingConfig(kind="papa", papa_every=10)
+    sched = build_schedule(60, 25, mcfg)
+    assert sched.variants() == (False, True)
+    mix_chunks = [c for c in sched.chunks if c.mixing]
+    # papa fires at 10, 20, 30, 40, 50 — each its own length-1 mix chunk
+    assert [c.start for c in mix_chunks] == [10, 20, 30, 40, 50]
+    assert all(c.length == 1 for c in mix_chunks)
+    assert sched.mix_pad_len == 1
+    # split chunks carry uniform gates; only window-final chunks record
+    for c in sched.chunks:
+        assert set(c.gates) in ({True}, {False})
+    assert [c.stop - 1 for c in sched.chunks if c.record] == [0, 25, 50, 59]
+
+
+def test_wash_and_none_keep_single_variant():
+    wash = build_schedule(13, 5, MixingConfig(kind="wash", mode="bucketed"))
+    assert wash.variants() == (True,)           # single dispatch per window
+    assert [c.length for c in wash.chunks] == [1, 5, 5, 2]
+    assert wash.mix_pad_len == 5
+    none = build_schedule(13, 5, MixingConfig(kind="none"))
+    assert none.variants() == (False,)          # collective-free throughout
+
+
+def test_no_split_keeps_one_chunk_per_window():
+    mcfg = MixingConfig(kind="papa", papa_every=10)
+    sched = build_schedule(60, 25, mcfg, split_gate_runs=False)
+    assert [(c.start, c.stop) for c in sched.chunks] == chunk_ranges(60, 25)
+    assert all(c.record for c in sched.chunks)
+    # mixed-gate windows ride the collective variant with inner gates
+    mixed = [c for c in sched.chunks if c.mixing]
+    assert any(set(c.gates) == {True, False} for c in mixed)
+
+
+def test_mixing_window_splits_gate_runs():
+    """Fig. 5b ablation windows (start/stop_step) must split like periods."""
+    mcfg = MixingConfig(kind="wash", mode="bucketed", start_step=4,
+                        stop_step=8)
+    sched = build_schedule(12, 12, mcfg)
+    assert sched.variants() == (False, True)
+    spans = [(c.start, c.stop, c.mixing) for c in sched.chunks]
+    assert spans == [(0, 1, False), (1, 4, False), (4, 8, True),
+                     (8, 12, False)]
+
+
+# ---------------------------------------------------------------------------
+# engine execution: parity under padding/splitting + the compile-count guard
+# ---------------------------------------------------------------------------
+
+
+def _parity(kind, total, every, **mix_kw):
+    tcfg = TrainConfig(population=4, optimizer="sgd", lr=0.05,
+                       total_steps=total, batch_size=4)
+    mcfg = MixingConfig(kind=kind, mode="bucketed", **mix_kw)
+    ref = train_population(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=every
+    )
+    engine_mod.reset_chunk_trace_count()
+    fused = train_population_sharded(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=every
+    )
+    traces = engine_mod.chunk_trace_count()
+    sched = build_schedule(total, every, mcfg)
+    assert traces == len(sched.variants()) <= 2, (kind, total, every, traces)
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ref.population),
+        jax.tree_util.tree_leaves(fused.population),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref.comm_scalars == fused.comm_scalars
+    assert ref.history["step"] == fused.history["step"]
+    np.testing.assert_allclose(
+        ref.history["comm"], fused.history["comm"], rtol=0, atol=0
+    )
+    return sched, traces
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("wash", dict(base_p=0.5)),
+    ("wash_opt", dict(base_p=0.5)),
+    ("papa", dict(papa_every=3, papa_alpha=0.9)),
+    ("none", dict()),
+])
+@pytest.mark.parametrize("total,every", [
+    (1, 25),      # total_steps=1: one length-1 chunk
+    (5, 1),       # record_every=1: per-step chunks, zero padding
+    (7, 10),      # record_every > total_steps: [0,1) + ragged tail
+])
+def test_padded_split_execution_bitwise_parity(kind, kw, total, every):
+    _parity(kind, total, every, **kw)
+
+
+def test_no_split_execution_matches_reference():
+    """split_gate_runs=False (PR 1's one-dispatch-per-window shape, with
+    inner gates masking no-mix steps) must still match the reference
+    bitwise and still compile each variant once."""
+    tcfg = TrainConfig(population=4, optimizer="sgd", lr=0.05,
+                       total_steps=13, batch_size=4)
+    mcfg = MixingConfig(kind="papa", papa_every=5, papa_alpha=0.9)
+    ref = train_population(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=5
+    )
+    engine_mod.reset_chunk_trace_count()
+    fused = train_population_sharded(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=5,
+        split_gate_runs=False,
+    )
+    sched = build_schedule(13, 5, mcfg, split_gate_runs=False)
+    assert engine_mod.chunk_trace_count() == len(sched.variants()) <= 2
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ref.population),
+        jax.tree_util.tree_leaves(fused.population),
+    ):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ref.comm_scalars == fused.comm_scalars
+
+
+def test_compile_count_one_without_split_two_with():
+    """The fused chunk fn traces exactly once per variant: WASH (gates all
+    on) compiles one executable; a PAPA pattern that exercises both split
+    variants compiles two — never more, for any chunk-length mix."""
+    _, traces = _parity("wash", 13, 5, base_p=0.5)
+    assert traces == 1                      # no gate-split applies
+    sched, traces = _parity("papa", 13, 5, papa_every=5, papa_alpha=0.9)
+    assert sched.variants() == (False, True)
+    assert traces == 2                      # both variants, once each
