@@ -205,6 +205,24 @@ def run(quick: bool = True):
                  fmt({"ref_us": us_r, "selected": idx.size,
                       "sent_per_member": idx.shape[1] * (n - 1)})))
 
+    # the SHIPPED stacked apply path behind --pallas-shuffle (mix_once /
+    # apply_plan_stacked): fused kernel vs the N-1-round roll path on the
+    # same population pytree (bitwise-equal; tests/test_kernels.py)
+    pop_tree = {"w": x}
+    plan_tree = {"w": idx}
+    us_roll = time_fn(
+        jax.jit(lambda p_, t_: shf.apply_plan_stacked(t_, p_, "bucketed")),
+        pop_tree, plan_tree, iters=3)
+    us_pal = time_fn(
+        jax.jit(lambda p_, t_: shf.apply_plan_stacked(
+            t_, p_, "bucketed", use_pallas=True)),
+        pop_tree, plan_tree, iters=3)
+    rows.append(("stacked_apply_roll", us_roll,
+                 fmt({"n": n, "d": d, "rounds": n - 1})))
+    rows.append(("stacked_apply_pallas", us_pal,
+                 fmt({"n": n, "d": d, "hbm_passes": 1,
+                      "speedup_vs_roll": us_roll / us_pal})))
+
     # flash attention: prefill-like block
     B, S, H, KV, hd = 1, 512, 4, 2, 64
     q = jax.random.normal(KEY, (B, S, H, hd), jnp.float32)

@@ -17,6 +17,12 @@ from repro.core.consensus import (
     sq_distance_to_consensus,
 )
 from repro.core import population
+from repro.core.shardplan import (
+    make_shardlocal_mixer,
+    mix_collective_sharded,
+    plan_population_mixing,
+    static_shard_mix_comm,
+)
 
 __all__ = [
     "MixingConfig",
@@ -32,4 +38,8 @@ __all__ = [
     "sq_distance_to_consensus",
     "avg_distance_to_consensus",
     "population",
+    "plan_population_mixing",
+    "mix_collective_sharded",
+    "make_shardlocal_mixer",
+    "static_shard_mix_comm",
 ]

@@ -46,6 +46,7 @@ class MixingConfig:
     papa_all_every: int = 1000   # PAPA-all / DART averaging period
     start_step: int = 0          # Fig. 5b ablation window
     stop_step: Optional[int] = None
+    pallas_shuffle: bool = False # bucketed applies via the fused Pallas kernel
 
     def shuffles_optimizer(self) -> bool:
         return self.kind == "wash_opt"
@@ -68,14 +69,18 @@ def _wash_step_stacked(
         key, params, layer_ids, total_layers, cfg.base_p, cfg.schedule, cfg.mode
     )
     n = jax.tree_util.tree_leaves(params)[0].shape[0]
-    new_params = shf.apply_plan_stacked(plan, params, cfg.mode)
+    new_params = shf.apply_plan_stacked(
+        plan, params, cfg.mode, use_pallas=cfg.pallas_shuffle
+    )
     new_opt = opt_state
     comm = shf.plan_sent_scalars(plan, n, cfg.mode)
     if cfg.shuffles_optimizer() and opt_state is not None:
         moments = momentum_like_leaves(opt_state, params)
         new_opt = dict(opt_state)
         for mk, mv in moments.items():
-            new_opt[mk] = shf.apply_plan_stacked(plan, mv, cfg.mode)
+            new_opt[mk] = shf.apply_plan_stacked(
+                plan, mv, cfg.mode, use_pallas=cfg.pallas_shuffle
+            )
             comm = comm + shf.plan_sent_scalars(plan, n, cfg.mode)
     return new_params, new_opt, comm
 
@@ -269,6 +274,7 @@ def mix_collective_blocked(
     total_layers: int,
     axis_name: str,
     gate: jax.Array,
+    use_pallas: bool = False,
 ) -> Tuple[PyTree, Optional[PyTree]]:
     """Fused-engine mixing on a *block* of members under shard_map.
 
@@ -304,13 +310,18 @@ def mix_collective_blocked(
             key, member, layer_ids, total_layers, cfg.base_p, cfg.schedule,
             mode="bucketed", n=n,
         )
-        new_params = shf.apply_plan_collective_blocked(plan, params, axis_name)
+        new_params = shf.apply_plan_collective_blocked(
+            plan, params, axis_name, use_pallas=use_pallas
+        )
         new_opt = opt_state
         if cfg.shuffles_optimizer() and opt_state is not None:
             new_opt = dict(opt_state)
             for mk, mv in momentum_like_leaves(opt_state, params).items():
                 new_opt[mk] = _gated(
-                    shf.apply_plan_collective_blocked(plan, mv, axis_name), mv
+                    shf.apply_plan_collective_blocked(
+                        plan, mv, axis_name, use_pallas=use_pallas
+                    ),
+                    mv,
                 )
         return _gated(new_params, params), new_opt
 

@@ -106,13 +106,19 @@ def bucket_count(d: int, n: int, p_l: float) -> int:
     return max(k // n, 0)
 
 
-def bucketed_plan(key: jax.Array, d: int, n: int, p_l: float) -> Optional[jax.Array]:
+def bucketed_plan(
+    key: jax.Array, d: int, n: int, p_l: float, k_per: Optional[int] = None
+) -> Optional[jax.Array]:
     """Index plan ``(n, k_per) int32``; row s holds coordinates shifted by s.
 
     Returns None when the leaf is too small / probability too low for even
     one coordinate per bucket (no communication for this leaf this step).
+    ``k_per`` overrides the count derived from ``p_l`` — the shard-local
+    planner (:mod:`repro.core.shardplan`) passes each shard's slice of the
+    *global* budget so per-shard volumes never exceed the global plan's.
     """
-    k_per = bucket_count(d, n, p_l)
+    if k_per is None:
+        k_per = bucket_count(d, n, p_l)
     if k_per == 0:
         return None
     idx = stratified_unique_indices(key, d, k_per * n)
@@ -120,7 +126,8 @@ def bucketed_plan(key: jax.Array, d: int, n: int, p_l: float) -> Optional[jax.Ar
 
 
 def bucketed_plan_layered(
-    key: jax.Array, num_layers: int, d_rest: int, n: int, p_vec
+    key: jax.Array, num_layers: int, d_rest: int, n: int, p_vec,
+    counts=None,
 ) -> Optional[jax.Array]:
     """Bucketed plan for a stacked-blocks leaf of member shape (L, d_rest).
 
@@ -129,10 +136,16 @@ def bucketed_plan_layered(
     the concatenated index set keeps Eq. 6's depth profile exactly while
     remaining a single static-shape plan.  The pooled set is randomly
     permuted, trimmed to a multiple of N and reshaped to (N, k_per).
+
+    ``counts`` overrides the per-layer coordinate counts (pre-clip); the
+    shard-local planner passes each shard's slice of the global per-layer
+    budget, with ``d_rest`` then being the *local* per-layer flat size.
     """
+    if counts is None:
+        counts = [int(round(float(p_vec[l]) * d_rest)) for l in range(num_layers)]
     pieces = []
     for l in range(num_layers):
-        k_l = int(round(float(p_vec[l]) * d_rest))
+        k_l = int(counts[l])
         if k_l <= 0:
             continue
         kl_key = jax.random.fold_in(key, l)
@@ -180,7 +193,7 @@ def bucketed_apply_collective(
     return out
 
 
-def _block_from(vals: jax.Array, axis_name: str, q: int, m: int) -> jax.Array:
+def _block_from(vals: jax.Array, axis_name, q: int, m: int) -> jax.Array:
     """This shard's copy of the block held q shards ahead on the ring."""
     if q % m == 0:
         return vals
@@ -190,7 +203,7 @@ def _block_from(vals: jax.Array, axis_name: str, q: int, m: int) -> jax.Array:
 
 
 def bucketed_apply_collective_blocked(
-    x_flat: jax.Array, idx: jax.Array, axis_name: str
+    x_flat: jax.Array, idx: jax.Array, axis_name
 ) -> jax.Array:
     """Bucketed apply for a shard holding ``n_local`` contiguous members.
 
@@ -289,8 +302,25 @@ def make_plan(
     return jax.tree_util.tree_unflatten(treedef, plans)
 
 
-def apply_plan_stacked(plan: PyTree, tree: PyTree, mode: str = "dense") -> PyTree:
-    """Apply a plan to a stacked pytree (params, or optimizer moments)."""
+def _bucketed_apply_pallas(leaf: jax.Array, idx: jax.Array) -> jax.Array:
+    """Stacked bucketed apply through the fused Pallas kernel (one VMEM
+    pass instead of N-1 roll/scatter rounds).  Pure data movement, so the
+    result is bitwise-identical to :func:`bucketed_apply_stacked`;
+    ``interpret=None`` auto-detects TPU vs interpret mode."""
+    from repro.kernels.wash_shuffle import bucketed_shuffle_pallas
+
+    n = leaf.shape[0]
+    flat = leaf.reshape(n, -1)
+    return bucketed_shuffle_pallas(flat, idx).reshape(leaf.shape)
+
+
+def apply_plan_stacked(
+    plan: PyTree, tree: PyTree, mode: str = "dense", use_pallas: bool = False
+) -> PyTree:
+    """Apply a plan to a stacked pytree (params, or optimizer moments).
+
+    ``use_pallas`` routes bucketed applies through the fused Pallas kernel
+    (:func:`repro.kernels.wash_shuffle.bucketed_shuffle_pallas`)."""
 
     def _one(p, leaf):
         if p is None:
@@ -298,6 +328,8 @@ def apply_plan_stacked(plan: PyTree, tree: PyTree, mode: str = "dense") -> PyTre
         if mode == "dense":
             perm, mask = p
             return dense_apply(leaf, perm, mask)
+        if use_pallas:
+            return _bucketed_apply_pallas(leaf, p)
         return bucketed_apply_stacked(leaf, p)
 
     return jax.tree_util.tree_map(
@@ -318,18 +350,28 @@ def apply_plan_collective(plan: PyTree, tree: PyTree, axis_name: str) -> PyTree:
 
 
 def apply_plan_collective_blocked(
-    plan: PyTree, tree: PyTree, axis_name: str
+    plan: PyTree, tree: PyTree, axis_name, use_pallas: bool = False
 ) -> PyTree:
     """Apply a bucketed plan to a block of members under shard_map.
 
     ``tree`` leaves carry a leading local-ens axis (n_local, *member_shape);
-    the plan was built for the *global* population, so every shard applies
-    the same indices and the cross-shard rows travel by ``ppermute``.
+    the plan was built for the population held along ``axis_name`` (a mesh
+    axis name or tuple of names), so every shard applies the same indices
+    and the cross-shard rows travel by ``ppermute``.
+
+    ``use_pallas`` routes the apply through the fused Pallas kernel when
+    the population axis is a single shard (the 1-device degenerate case,
+    where the blocked apply is exactly the stacked roll); multi-shard
+    exchanges always take the ``ppermute`` path — the kernel is a local
+    HBM-pass optimization, not a collective.
     """
+    pallas_ok = use_pallas and axis_size(axis_name) == 1
 
     def _one(p, leaf):
         if p is None:
             return leaf
+        if pallas_ok:
+            return _bucketed_apply_pallas(leaf, p)
         n_local = leaf.shape[0]
         flat = leaf.reshape(n_local, -1)
         return bucketed_apply_collective_blocked(flat, p, axis_name).reshape(

@@ -34,6 +34,36 @@ def make_host_ensemble_mesh(population: int):
     return _mk((size,), ("ens",))
 
 
+def make_host_mesh(population: int, kind: str = "ens"):
+    """Host-device-count-clamped multi-axis mesh for the fused engine.
+
+      ens        (E,)        — the existing ens-only default
+      ens_dp     (E, D)      — population + data axes
+      ens_dp_mp  (E, D, M)   — population + data + model axes
+
+    E is the largest divisor of the population that fits the host (as in
+    :func:`make_host_ensemble_mesh`); the remaining devices fill the model
+    axis (2 when it divides, for ``ens_dp_mp``) then the data axis.  Axes
+    are never padded past the host's device count, so the constructors are
+    safe on any CPU/TPU host; a 1-device host degenerates every kind to
+    the (1,)/(1,1)/(1,1,1) mesh.
+    """
+    if kind == "ens":
+        return make_host_ensemble_mesh(population)
+    if kind not in ("ens_dp", "ens_dp_mp"):
+        raise ValueError(f"unknown host mesh kind {kind!r}")
+    ndev = len(jax.devices())
+    e = max(
+        s for s in range(1, min(population, ndev) + 1) if population % s == 0
+    )
+    rest = ndev // e
+    m = 2 if kind == "ens_dp_mp" and rest % 2 == 0 else 1
+    d = rest // m
+    shape = (e, d) if kind == "ens_dp" else (e, d, m)
+    axes = ("ens", "data") if kind == "ens_dp" else ("ens", "data", "model")
+    return _mk(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -57,6 +57,17 @@ def main(argv=None):
                     help="shard_map engine: keep one dispatch per record "
                          "window instead of splitting no-mix gate runs onto "
                          "the collective-free executable")
+    ap.add_argument("--mesh", default="ens",
+                    choices=["ens", "ens_dp", "ens_dp_mp"],
+                    help="shard_map engine: host mesh layout (ens-only, "
+                         "ens+data, or ens+data+model; clamped to the "
+                         "host's device count).  ens_dp_mp also shards "
+                         "params via repro.sharding.rules and mixes with "
+                         "shard-local plans (core.shardplan)")
+    ap.add_argument("--pallas-shuffle", action="store_true",
+                    help="apply bucketed shuffles through the fused Pallas "
+                         "kernel (kernels.wash_shuffle; interpret mode "
+                         "auto-detects off-TPU hosts)")
     ap.add_argument("--batch-size", type=int, default=8)
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
@@ -88,21 +99,43 @@ def main(argv=None):
         seed=args.seed,
     )
     mcfg = MixingConfig(kind=args.mixing, base_p=args.base_p,
-                        schedule=args.schedule, mode=args.mode)
+                        schedule=args.schedule, mode=args.mode,
+                        pallas_shuffle=args.pallas_shuffle)
     if (args.engine == "shard_map" and args.mixing in ("wash", "wash_opt")
             and args.mode != "bucketed"):
         print("note: engine=shard_map lowers bucketed plans only; "
               "switching --mode dense -> bucketed")
         mcfg = dataclasses.replace(mcfg, mode="bucketed")
+    # read mcfg.mode, not args.mode: the shard_map engine auto-coerces
+    # dense wash configs to bucketed just above
+    if args.pallas_shuffle and mcfg.mode == "dense":
+        ap.error("--pallas-shuffle fuses bucketed applies; use --mode bucketed")
 
     engine_opts = None
+    mesh = None
     if args.engine == "shard_map":
         engine_opts = {
             "async_staging": not args.sync_staging,
             "split_gate_runs": not args.no_gate_split,
+            "pallas_shuffle": args.pallas_shuffle,
         }
-    elif args.sync_staging or args.no_gate_split:
-        ap.error("--sync-staging/--no-gate-split require --engine shard_map")
+        if args.mesh != "ens":
+            from repro.launch.mesh import make_host_mesh
+
+            mesh = make_host_mesh(args.population, args.mesh)
+            if "model" in mesh.axis_names and mesh.shape["model"] > 1:
+                from repro.sharding import rules
+
+                params_sds = jax.eval_shape(
+                    lambda: M.init_params(jax.random.key(0), cfg)
+                )
+                engine_opts["param_specs"] = rules.param_pspecs(
+                    params_sds, cfg, mesh
+                )
+            print(f"mesh: {dict(mesh.shape)}")
+    elif args.sync_staging or args.no_gate_split or args.mesh != "ens":
+        ap.error("--sync-staging/--no-gate-split/--mesh require "
+                 "--engine shard_map")
     if args.record_every is not None and args.record_every < 1:
         ap.error("--record-every must be >= 1")
     record_every = (
@@ -112,7 +145,7 @@ def main(argv=None):
     res = train_population(
         key, lambda k: M.init_params(k, cfg), loss_fn, data_fn,
         tcfg, mcfg, cfg.num_layers, record_every=record_every,
-        engine=args.engine, engine_opts=engine_opts,
+        engine=args.engine, mesh=mesh, engine_opts=engine_opts,
     )
 
     soup = averaged_params(res)

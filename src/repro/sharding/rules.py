@@ -170,3 +170,46 @@ def named(tree_specs: PyTree, mesh) -> PyTree:
         tree_specs,
         is_leaf=lambda x: isinstance(x, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# stacked populations (WASH): specs for the leading ens axis + opt moments
+# ---------------------------------------------------------------------------
+
+
+def population_pspecs(member_specs: PyTree, pop_axes=("ens",)) -> PyTree:
+    """Specs for a stacked population: the leading axis is sharded over the
+    population mesh axes, every member dim keeps its member-level spec.
+
+    ``member_specs`` leaves are member-level ``PartitionSpec``s (``P()``
+    replicates a member within its population shard); ``pop_axes`` is the
+    tuple of mesh axes carrying the population (``("ens",)``, or
+    ``("ens", "data")`` when the population divides over data too — see
+    :func:`repro.core.shardplan.classify_axes`).
+    """
+    lead = pop_axes[0] if len(pop_axes) == 1 else tuple(pop_axes)
+
+    def _one(s):
+        entries = tuple(s) if s is not None else ()
+        return P(lead, *entries)
+
+    return jax.tree_util.tree_map(
+        _one, member_specs, is_leaf=lambda x: x is None or isinstance(x, P)
+    )
+
+
+def opt_pspecs(opt_state: PyTree, pop_specs: PyTree, pop_axes=("ens",)) -> PyTree:
+    """Specs for a vmapped optimizer state over a stacked population.
+
+    Moment slots (``mu``/``nu`` — the leaves WASH+Opt shuffles) mirror the
+    population's specs exactly, so moment shards line up with their
+    parameter shards and the replayed shuffle plan indexes both with the
+    same local coordinates.  Everything else (step counters) is sharded
+    over the population axes only.
+    """
+    lead = pop_axes[0] if len(pop_axes) == 1 else tuple(pop_axes)
+    return {
+        k: pop_specs if k in ("mu", "nu")
+        else jax.tree_util.tree_map(lambda _: P(lead), opt_state[k])
+        for k in opt_state
+    }

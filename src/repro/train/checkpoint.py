@@ -12,6 +12,19 @@ PyTree = Any
 _SEP = "::"
 
 
+def _gather(leaf):
+    """Explicitly fetch a leaf to host memory before ``np.asarray``.
+
+    The fused shard_map engine returns populations whose leaves are
+    sharded over several devices; ``np.asarray`` on those either errors
+    (non-fully-addressable arrays) or triggers an implicit cross-device
+    transfer inside numpy.  ``jax.device_get`` assembles the shards
+    explicitly on the host instead."""
+    if isinstance(leaf, jax.Array) and len(leaf.sharding.device_set) > 1:
+        return jax.device_get(leaf)
+    return leaf
+
+
 def _flat_paths(tree: PyTree):
     flat, _ = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
@@ -19,7 +32,7 @@ def _flat_paths(tree: PyTree):
         key = _SEP.join(
             str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
         )
-        out[key] = np.asarray(leaf)
+        out[key] = np.asarray(_gather(leaf))
     return out
 
 

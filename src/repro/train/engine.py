@@ -53,6 +53,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import TrainConfig
 from repro.core import population as pop
+from repro.core import shardplan
 from repro.core.compat import shard_map
 from repro.core.consensus import avg_distance_to_consensus
 from repro.core.layer_index import infer_layer_ids, total_layers
@@ -62,6 +63,7 @@ from repro.core.mixing import (
     static_mix_comm,
 )
 from repro.core.prng import step_key
+from repro.sharding import rules as sharding_rules
 from repro.optim import cosine_lr, make_optimizer
 from repro.train.loop import TrainResult
 from repro.train.schedule import (  # noqa: F401  (re-exported API)
@@ -101,6 +103,8 @@ def make_fused_chunk_fn(
     *,
     with_mixing: bool = True,
     donate: bool = True,
+    pplan: Optional[shardplan.PopulationPlan] = None,
+    use_pallas: bool = False,
 ):
     """Build the engine's fused chunk dispatch: one donated jit scanning
     (per-member update → gated collective mix) over a chunk of steps under
@@ -108,20 +112,48 @@ def make_fused_chunk_fn(
     dispatched on no-mix gate runs (the only other executable the engine
     ever compiles).  Exposed so benchmarks time the SHIPPED engine body
     rather than a copy (``benchmarks/kernels_bench.py``; pass
-    ``donate=False`` there so repeated timing calls can reuse inputs)."""
+    ``donate=False`` there so repeated timing calls can reuse inputs).
+
+    ``pplan`` (a :class:`repro.core.shardplan.PopulationPlan`) switches the
+    body to the multi-axis mesh layout: the population is sharded over
+    ``pplan.pop_axes``, members over ``pplan.dp_axes``-split batches with
+    gradients ``pmean``-ed back, model-sharded leaves are all-gathered for
+    the black-box ``loss_fn`` and re-sliced for the shard-local optimizer
+    update, and mixing runs on shard-local plans
+    (:func:`repro.core.shardplan.mix_collective_sharded`).  ``pplan=None``
+    keeps the single-``ens``-axis body bit-for-bit unchanged."""
+    pop_axes = pplan.pop_axes if pplan is not None else ("ens",)
+    dp_axes = pplan.dp_axes if pplan is not None else ()
+    # gather/slice only when something actually needs it, so the trivial
+    # multi-axis case keeps the exact single-axis dataflow (bitwise parity)
+    gathered = pplan is not None and (pplan.any_sharded or bool(dp_axes))
+    loss_axes = "ens" if pplan is None else pop_axes + dp_axes
 
     def chunk_fn(population, opt_state, batches, lrs, keydata, gates, n_valid):
         _CHUNK_TRACES[0] += 1
 
         # the loss rides the fori_loop carry, whose dtype is fixed up
         # front — derive it from loss_fn so non-f32 losses (x64, bf16)
-        # keep working like they did under lax.scan's unconstrained ys
-        loss_sds = jax.eval_shape(
-            loss_fn,
-            jax.tree_util.tree_map(
+        # keep working like they did under lax.scan's unconstrained ys.
+        # Member templates use the FULL member shapes (loss_fn sees
+        # gathered leaves when the members are model-sharded); batch
+        # templates stay local (loss_fn sees this chip's batch shard).
+        if pplan is not None:
+            member_sds = jax.tree_util.tree_unflatten(
+                pplan.treedef,
+                [jax.ShapeDtypeStruct(info.member_shape, x.dtype)
+                 for info, x in zip(
+                     pplan.infos, jax.tree_util.tree_flatten(population)[0]
+                 )],
+            )
+        else:
+            member_sds = jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype),
                 population,
-            ),
+            )
+        loss_sds = jax.eval_shape(
+            loss_fn,
+            member_sds,
             jax.tree_util.tree_map(
                 lambda x: jax.ShapeDtypeStruct(x.shape[2:], x.dtype), batches
             ),
@@ -134,21 +166,47 @@ def make_fused_chunk_fn(
                 (batches, lrs, keydata, gates),
             )
 
-            def one(pm, sm, bm):
-                loss, g = jax.value_and_grad(loss_fn)(pm, bm)
-                p2, s2 = opt_update(pm, g, sm, lr)
-                return p2, s2, loss
+            if gathered:
+                # FSDP-style step for model-sharded members: gather full
+                # leaves for the black-box loss (an exact reconstruction),
+                # pmean gradients over any batch-splitting data axes, then
+                # slice this chip's shard back for the elementwise
+                # optimizer update — bitwise equal to updating the same
+                # shard of an unsharded member.
+                p_full = shardplan.all_gather_population(p, pplan)
+                losses, g_full = jax.vmap(
+                    lambda pm, bm: jax.value_and_grad(loss_fn)(pm, bm)
+                )(p_full, batch)
+                if dp_axes:
+                    g_full = jax.tree_util.tree_map(
+                        lambda x: lax.pmean(x, dp_axes), g_full
+                    )
+                g_loc = shardplan.shard_population(g_full, pplan)
+                p2, s2 = jax.vmap(
+                    lambda pm, gm, sm: opt_update(pm, gm, sm, lr)
+                )(p, g_loc, s)
+            else:
+                def one(pm, sm, bm):
+                    loss, g = jax.value_and_grad(loss_fn)(pm, bm)
+                    p2_, s2_ = opt_update(pm, g, sm, lr)
+                    return p2_, s2_, loss
 
-            p2, s2, losses = jax.vmap(one)(p, s, batch)
+                p2, s2, losses = jax.vmap(one)(p, s, batch)
 
             if with_mixing:
                 k = jax.random.wrap_key_data(kd)
-                p3, s3 = mix_collective_blocked(
-                    k, p2, s2, mcfg, layer_ids, tl, "ens", gate
-                )
+                if pplan is not None:
+                    p3, s3 = shardplan.mix_collective_sharded(
+                        k, p2, s2, mcfg, pplan, gate, use_pallas=use_pallas
+                    )
+                else:
+                    p3, s3 = mix_collective_blocked(
+                        k, p2, s2, mcfg, layer_ids, tl, "ens", gate,
+                        use_pallas=use_pallas,
+                    )
             else:
                 p3, s3 = p2, s2
-            loss_mean = lax.pmean(jnp.mean(losses), "ens")
+            loss_mean = lax.pmean(jnp.mean(losses), loss_axes)
             if loss_mean.dtype != loss_sds.dtype or getattr(
                 loss_mean.aval, "weak_type", False
             ):
@@ -196,14 +254,22 @@ def train_population_sharded(
     mesh=None,
     async_staging: bool = True,
     split_gate_runs: bool = True,
+    param_specs=None,
+    pallas_shuffle: bool = False,
 ) -> TrainResult:
     """Drop-in replacement for :func:`repro.train.loop.train_population`
     running the fused shard_map engine.  Same signature plus an optional
-    ``mesh`` (an ``ens``-axis mesh; default: the host's devices),
-    ``async_staging`` (double-buffer chunk k+1's batches on a staging
-    thread while chunk k executes) and ``split_gate_runs`` (dispatch
+    ``mesh`` (default: the host's ``ens``-only mesh; 2D/3D
+    ``(ens[, data][, model])`` meshes route mixing through the shard-local
+    planner — see :mod:`repro.core.shardplan` — and shard batches over the
+    data axes), ``async_staging`` (double-buffer chunk k+1's batches on a
+    staging thread while chunk k executes), ``split_gate_runs`` (dispatch
     no-mix spans on the collective-free executable; see
-    :mod:`repro.train.schedule`)."""
+    :mod:`repro.train.schedule`), ``param_specs`` (member-level
+    ``PartitionSpec``s, e.g. from :func:`repro.sharding.rules.param_pspecs`;
+    requires a mesh with the named axes) and ``pallas_shuffle`` (apply
+    bucketed shuffles through the fused Pallas kernel where the exchange
+    is chip-local)."""
     if mcfg.kind in ("wash", "wash_opt") and mcfg.mode != "bucketed":
         raise ValueError(
             f"engine='shard_map' only lowers bucketed WASH plans; got "
@@ -215,8 +281,12 @@ def train_population_sharded(
         from repro.launch.mesh import make_host_ensemble_mesh
 
         mesh = make_host_ensemble_mesh(n)
-    m = int(mesh.shape["ens"])
-    assert n % m == 0, f"population {n} must divide over ens axis of size {m}"
+    multi = len(mesh.axis_names) > 1
+    if param_specs is not None and not multi:
+        raise ValueError(
+            "param_specs shard members over mesh axes; pass a multi-axis "
+            "mesh (e.g. repro.launch.mesh.make_host_mesh) along with them"
+        )
 
     population = pop.init_population(init_fn, key, n, same_init=tcfg.same_init)
     lids = infer_layer_ids(pop.member(population, 0), num_blocks)
@@ -227,18 +297,69 @@ def train_population_sharded(
     )
     opt_state = jax.vmap(opt_init)(population)
 
-    pspec = jax.tree_util.tree_map(lambda _: P("ens"), population)
-    ospec = jax.tree_util.tree_map(lambda _: P("ens"), opt_state)
-
     # exact per-mix-step comm from the static plan sizes (member template:
     # shapes only, no data copy); never None here — dense WASH was rejected
     member_tpl = jax.tree_util.tree_map(
         lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), population
     )
-    comm_per_mix_step = static_mix_comm(
-        member_tpl, mcfg, lids, tl, n, opt_state=opt_state
-    )
+
+    use_pallas = pallas_shuffle or mcfg.pallas_shuffle
+    if multi:
+        member_specs = (
+            param_specs if param_specs is not None
+            else jax.tree_util.tree_map(lambda _: P(), member_tpl)
+        )
+        pplan = shardplan.plan_population_mixing(
+            mesh, member_tpl, member_specs, mcfg, lids, tl, n
+        )
+        pspec = sharding_rules.population_pspecs(member_specs, pplan.pop_axes)
+        ospec = sharding_rules.opt_pspecs(opt_state, pspec, pplan.pop_axes)
+        comm_per_mix_step = shardplan.static_shard_mix_comm(
+            pplan, opt_state=opt_state
+        )
+        pop_entry = (
+            pplan.pop_axes[0] if len(pplan.pop_axes) == 1
+            else tuple(pplan.pop_axes)
+        )
+        dp_sizes = 1
+        for a in pplan.dp_axes:
+            dp_sizes *= pplan.size(a)
+    else:
+        pplan = None
+        m = int(mesh.shape["ens"])
+        assert n % m == 0, f"population {n} must divide over ens axis of size {m}"
+        pspec = jax.tree_util.tree_map(lambda _: P("ens"), population)
+        ospec = jax.tree_util.tree_map(lambda _: P("ens"), opt_state)
+        comm_per_mix_step = static_mix_comm(
+            member_tpl, mcfg, lids, tl, n, opt_state=opt_state
+        )
+        pop_entry = "ens"
+        dp_sizes = 1
     assert comm_per_mix_step is not None
+
+    # Leftover data axes split each member's batch only when EVERY batch
+    # leaf's leading dim divides (all-or-nothing, so a split leaf never
+    # pairs with a replicated one inside a shard); otherwise batches
+    # replicate over dp and the gradient pmean is an exact identity.
+    split_batch_over_dp = False
+    if pplan is not None and pplan.dp_axes:
+        try:
+            probe = jax.eval_shape(
+                lambda k: data_fn(0, 0, k), jax.random.fold_in(key, 0)
+            )
+        except Exception:  # non-traceable data_fn: probe with a real call
+            probe = data_fn(0, 0, jax.random.fold_in(key, 0))
+        split_batch_over_dp = all(
+            leaf.shape and leaf.shape[0] % dp_sizes == 0
+            for leaf in jax.tree_util.tree_leaves(probe)
+        )
+
+    def _batch_leaf_spec(shape) -> P:
+        """(pad_len, n, B, ...) leaf: member axis over the population axes,
+        the per-member batch over leftover data axes when they split."""
+        if split_batch_over_dp:
+            return P(None, pop_entry, tuple(pplan.dp_axes))
+        return P(None, pop_entry)
 
     sched = build_schedule(
         tcfg.total_steps, record_every, mcfg, split_gate_runs=split_gate_runs
@@ -248,10 +369,13 @@ def train_population_sharded(
 
     def get_fused(chunk: ChunkPlan, batches):
         if chunk.mixing not in fused:
-            bspecs = jax.tree_util.tree_map(lambda _: P(None, "ens"), batches)
+            bspecs = jax.tree_util.tree_map(
+                lambda x: _batch_leaf_spec(x.shape), batches
+            )
             fused[chunk.mixing] = make_fused_chunk_fn(
                 mesh, mcfg, lids, tl, opt_update, loss_fn,
                 pspec, ospec, bspecs, with_mixing=chunk.mixing,
+                pplan=pplan, use_pallas=use_pallas,
             )
         return fused[chunk.mixing]
 
@@ -295,7 +419,7 @@ def train_population_sharded(
         n_valid = jnp.asarray(chunk.length, jnp.int32)
 
         batches = jax.device_put(batches, jax.tree_util.tree_map(
-            lambda _: NamedSharding(mesh, P(None, "ens")), batches
+            lambda x: NamedSharding(mesh, _batch_leaf_spec(x.shape)), batches
         ))
         lrs, keydata, gates, n_valid = jax.device_put(
             (lrs, keydata, gates, n_valid), rep_sharding

@@ -54,8 +54,9 @@ def train_population(
     """Train a population.  ``engine="vmap"`` is this module's two-jit
     reference loop; ``engine="shard_map"`` dispatches to the fused
     single-jit collective engine (:mod:`repro.train.engine`), which also
-    receives ``mesh`` (an ``ens``-axis mesh) and any ``engine_opts``
-    (e.g. ``async_staging``/``split_gate_runs``)."""
+    receives ``mesh`` (an ``ens``-only or ``(ens[, data][, model])``
+    mesh) and any ``engine_opts`` (``async_staging``/``split_gate_runs``/
+    ``param_specs``/``pallas_shuffle``)."""
     if engine == "shard_map":
         from repro.train.engine import train_population_sharded
 

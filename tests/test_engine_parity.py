@@ -279,6 +279,36 @@ def test_comm_parity_exact_past_2pow24_end_to_end():
     assert ref.history["comm"] == fused.history["comm"] == [float(sent)]
 
 
+def test_engine_opts_pallas_shuffle_parity():
+    """engine_opts["pallas_shuffle"]: the fused engine's shuffle applies
+    through the fused Pallas kernel (chip-local exchanges, i.e. the
+    1-device mesh here).  The kernel output itself is bitwise-equal to the
+    roll path (tests/test_kernels.py asserts that), but swapping it into
+    the donated fori_loop changes how XLA fuses the SURROUNDING optimizer
+    arithmetic — the same ~1ulp fusion sensitivity the engine docs note
+    for select-masking — so the end-to-end contract here is near-exact,
+    with identical comm accounting and history schedule."""
+    tcfg = TrainConfig(population=4, optimizer="adamw", lr=1e-3,
+                       total_steps=6, batch_size=4)
+    mcfg = MixingConfig(kind="wash_opt", base_p=0.5, mode="bucketed")
+    ref = train_population(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=3
+    )
+    fused = train_population(
+        KEY, _init, _loss_fn, _data_fn, tcfg, mcfg, 2, record_every=3,
+        engine="shard_map", engine_opts={"pallas_shuffle": True},
+    )
+    for a, b in zip(
+        jax.tree_util.tree_leaves((ref.population, ref.opt_state["mu"])),
+        jax.tree_util.tree_leaves((fused.population, fused.opt_state["mu"])),
+    ):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7
+        )
+    assert ref.comm_scalars == fused.comm_scalars
+    assert ref.history["step"] == fused.history["step"]
+
+
 def test_record_fn_runs_at_boundaries():
     tcfg = TrainConfig(population=2, optimizer="sgd", lr=0.05, total_steps=7,
                        batch_size=4)
