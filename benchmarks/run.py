@@ -13,6 +13,7 @@ select modules.
   fig5b   ablation_start_stop    (paper Fig. 5b)
   tab4    ablation_schedule      (paper Tab. 4)
   kernels kernels_bench          (Pallas kernels, interpret mode)
+  serving serving_bench          (old-loop vs scan decode, soup vs ensemble)
   roofline roofline              (deliverable g, from dry-run JSONs)
 """
 
@@ -36,6 +37,7 @@ MODULES = {
     "tab4": "benchmarks.ablation_schedule",
     "fig6": "benchmarks.interpolation_heatmap",
     "kernels": "benchmarks.kernels_bench",
+    "serving": "benchmarks.serving_bench",
     "roofline": "benchmarks.roofline",
 }
 

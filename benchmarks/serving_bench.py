@@ -1,0 +1,155 @@
+"""Serving engine benchmark: per-token loop vs fused scan, soup vs ensemble.
+
+Rows (CSV via benchmarks/run.py, mirrored into
+``benchmarks/out/serving_bench.json``):
+
+  serve_oldloop_*    the legacy per-token Python loop (fresh jit closure
+                     per request + one host dispatch per token) — the bug
+                     the engine replaced; its re-trace count per request
+                     is reported in the derived column.
+  serve_scan_*       the fused engine: one compiled decode program per
+                     shape, reused across requests (0 traces after warm).
+  serve_member       mode=member (single unaveraged member).
+  serve_ensemble     mode=ensemble — all N members decoded per step,
+                     logits averaged in-scan: the paper's accuracy
+                     ceiling, priced here in tokens/sec against the soup.
+
+Timings are steady-state (compile excluded); trace counts are measured by
+the engine's counters, not inferred.  ``--smoke`` runs the CI fast-lane
+guard: tiny config, 8 new tokens, assert the scan path compiled decode
+exactly once and beat zero — then still emits the JSON row.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from benchmarks._util import Row, fmt, time_fn
+
+KEY = jax.random.key(0)
+
+JSON_OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "out", "serving_bench.json")
+
+
+def _problem(batch: int, prompt: int):
+    from repro.configs.base import ModelConfig
+    from repro.models import transformer as M
+
+    cfg = ModelConfig(name="serve-bench", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=128,
+                      dtype="float32")
+    popn = jax.vmap(lambda k: M.init_params(k, cfg))(jax.random.split(KEY, 4))
+    tokens = jax.random.randint(jax.random.fold_in(KEY, 1), (batch, prompt),
+                                0, cfg.vocab_size)
+    return cfg, popn, {"tokens": tokens}
+
+
+def run(quick: bool = True):
+    from repro.serving import engine as serving
+
+    batch, prompt = (4, 16) if quick else (16, 64)
+    max_new = 16 if quick else 64
+    iters = 3 if quick else 5
+    cfg, popn, req = _problem(batch, prompt)
+    soup = serving.averaged_params(popn)
+    toks = batch * max_new
+
+    rows: list[Row] = []
+    results = {}
+
+    def add(name, us, derived):
+        rows.append((name, us, fmt(derived)))
+        results[name] = {"us_per_call": us, **derived}
+
+    # --- legacy per-token loop (the replaced path) ------------------------
+    serving.reset_trace_counts()
+    us = time_fn(
+        lambda: serving.generate_reference(soup, cfg, req, max_new),
+        iters=iters, warmup=1,
+    )
+    calls = iters + 1
+    old_traces = serving.reference_trace_count() / calls
+    old_toks = toks / (us * 1e-6)
+    add("serve_oldloop_soup", us,
+        {"tok_s": old_toks, "traces_per_request": old_traces,
+         "dispatches_per_request": max_new - 1})
+
+    # --- fused scan engine ------------------------------------------------
+    serving.reset_trace_counts()
+    serving.clear_executable_cache()
+    us = time_fn(
+        lambda: serving.generate(soup, cfg, req, max_new),
+        iters=iters, warmup=1,
+    )
+    scan_traces = serving.decode_trace_count()  # total, across ALL requests
+    scan_toks = toks / (us * 1e-6)
+    add("serve_scan_soup", us,
+        {"tok_s": scan_toks, "traces_total": scan_traces,
+         "dispatches_per_request": 1, "speedup_vs_oldloop": scan_toks / old_toks})
+
+    # params are resolved once per mode (deployment-time work) so the rows
+    # time the decode engine, not per-request soup/member routing
+    member = serving.serving_params(popn, "member", 0)
+    us = time_fn(
+        lambda: serving.generate(member, cfg, req, max_new),
+        iters=iters, warmup=1,
+    )
+    add("serve_member", us, {"tok_s": toks / (us * 1e-6)})
+
+    stacked = serving.serving_params(popn, "ensemble")
+    us = time_fn(
+        lambda: serving.generate(stacked, cfg, req, max_new, mode="ensemble"),
+        iters=iters, warmup=1,
+    )
+    ens_toks = toks / (us * 1e-6)
+    add("serve_ensemble", us,
+        {"tok_s": ens_toks, "members": 4,
+         "soup_speedup_vs_ensemble": scan_toks / ens_toks})
+
+    os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
+    with open(JSON_OUT, "w") as f:
+        json.dump({"batch": batch, "prompt": prompt, "max_new": max_new,
+                   "rows": results}, f, indent=2)
+    return rows
+
+
+def smoke() -> None:
+    """CI fast-lane guard: tiny config, 8 new tokens, trace-count assert."""
+    from repro.serving import engine as serving
+
+    cfg, popn, req = _problem(batch=2, prompt=8)
+    soup = serving.averaged_params(popn)
+    serving.reset_trace_counts()
+    serving.clear_executable_cache()
+    out = serving.generate(soup, cfg, req, 8)
+    out2 = serving.generate(soup, cfg, req, 8)
+    assert out.shape == out2.shape == (2, 16), out.shape
+    assert serving.decode_trace_count() == 1, (
+        f"scan decode must compile exactly once per shape, "
+        f"traced {serving.decode_trace_count()}x"
+    )
+    assert serving.prefill_trace_count() == 1
+    rows = run(quick=True)
+    from benchmarks._util import print_rows
+
+    print_rows(rows)
+    print(f"# serving smoke OK; wrote {JSON_OUT}")
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        from benchmarks._util import print_rows
+
+        print_rows(run(quick=not args.full))

@@ -18,27 +18,33 @@ from repro.core import population as pop
 PyTree = Any
 
 
+def balanced_mean(x: jax.Array) -> jax.Array:
+    """Mean over axis 0 as a fixed balanced pairwise-sum tree.
+
+    The explicit pairwise tree (instead of ``jnp.mean``'s backend-chosen
+    reduction order) makes the result *layout-independent bitwise*: the
+    same arithmetic DAG runs whether the leading axis lives on one device
+    or is sharded one-row-per-device.  Used for both weight soups
+    (:func:`uniform_soup`) and the serving engine's ensemble-mode logit
+    averaging, so the two averaging paths cannot drift apart numerically.
+    """
+    rows = [x[i] for i in range(x.shape[0])]
+    n = len(rows)
+    while len(rows) > 1:
+        nxt = [rows[i] + rows[i + 1] for i in range(0, len(rows) - 1, 2)]
+        if len(rows) % 2:
+            nxt.append(rows[-1])
+        rows = nxt
+    return rows[0] / n
+
+
 def uniform_soup(stacked: PyTree) -> PyTree:
     """Uniform weight soup θ̄ = (1/N) Σ θ_n, as a fixed balanced-tree sum.
 
-    The explicit pairwise tree (instead of ``jnp.mean``'s backend-chosen
-    reduction order) makes the soup *layout-independent bitwise*: the same
-    arithmetic DAG runs whether the ens axis lives on one device or is
-    sharded one-member-per-device by the fused engine, so serving soups
-    from either engine compare equal — asserted in tests/test_shardplan.py
-    on a real multi-device population."""
-
-    def _soup(x):
-        rows = [x[i] for i in range(x.shape[0])]
-        n = len(rows)
-        while len(rows) > 1:
-            nxt = [rows[i] + rows[i + 1] for i in range(0, len(rows) - 1, 2)]
-            if len(rows) % 2:
-                nxt.append(rows[-1])
-            rows = nxt
-        return rows[0] / n
-
-    return jax.tree_util.tree_map(_soup, stacked)
+    Layout-independent bitwise (see :func:`balanced_mean`): serving soups
+    from the vmap and fused shard_map engines compare equal — asserted in
+    tests/test_shardplan.py on a real multi-device population."""
+    return jax.tree_util.tree_map(balanced_mean, stacked)
 
 
 def soup_of(stacked: PyTree, indices: List[int]) -> PyTree:

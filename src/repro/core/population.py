@@ -40,6 +40,22 @@ def member(population: PyTree, i) -> PyTree:
     return jax.tree_util.tree_map(lambda x: x[i], population)
 
 
+def host_gather(leaf):
+    """Fetch a leaf to host memory iff it spans multiple devices.
+
+    The one shared predicate for "can this leaf be consumed single-host
+    as-is?" — ``np.asarray`` on a non-fully-addressable sharded array
+    either errors or triggers an implicit cross-device transfer, so
+    multi-device leaves are assembled explicitly via ``jax.device_get``.
+    Used by checkpointing (``train.checkpoint``) and serving
+    (``serving.engine``); keep them on this helper so they cannot drift.
+    """
+    devs = getattr(getattr(leaf, "sharding", None), "device_set", None)
+    if devs is not None and len(devs) > 1:
+        return jax.device_get(leaf)
+    return leaf
+
+
 def replicate(params: PyTree, n: int) -> PyTree:
     """Same-initialization population (the paper's default for WASH)."""
     return jax.tree_util.tree_map(

@@ -64,6 +64,16 @@ def make_host_mesh(population: int, kind: str = "ens"):
     return _mk(shape, axes)
 
 
+def make_host_data_mesh():
+    """Data-only mesh over every device on this host (serving default).
+
+    The serving engine shards the request batch over ``data`` and
+    replicates params — the natural layout for soup/member/ensemble modes,
+    where each model instance fits a chip and throughput comes from batch
+    parallelism.  A 1-device host degenerates to the (1,) mesh."""
+    return _mk((len(jax.devices()),), ("data",))
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")

@@ -74,6 +74,10 @@ def main(argv=None):
     ap.add_argument("--lr", type=float, default=0.05)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None, help="save averaged model here (.npz)")
+    ap.add_argument("--ckpt-population", default=None,
+                    help="save the full stacked population here (.npz) — "
+                         "the input format of repro.launch.serve --ckpt, "
+                         "which needs all members for member/ensemble modes")
     ap.add_argument("--history", default=None, help="dump history JSON here")
     args = ap.parse_args(argv)
 
@@ -162,6 +166,9 @@ def main(argv=None):
     if args.ckpt:
         written = checkpoint.save(args.ckpt, soup)
         print(f"saved averaged model -> {written}")
+    if args.ckpt_population:
+        written = checkpoint.save(args.ckpt_population, res.population)
+        print(f"saved population -> {written}")
     if args.history:
         os.makedirs(os.path.dirname(args.history) or ".", exist_ok=True)
         with open(args.history, "w") as f:

@@ -329,7 +329,13 @@ def _block_decode(block_l, cfg: ModelConfig, x, cache_l, pos):
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
-    """serve_step: ONE new token (B,1) against the cache at position ``pos``."""
+    """serve_step: ONE new token (B,1) against the cache at position ``pos``.
+
+    ``pos`` may be a Python int or a traced scalar: every cache update is a
+    ``dynamic_update``/ring-slot op, so the serving engine can drive this
+    from a ``lax.scan`` over token positions without shape specialization.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
     x = _embed_tokens(params, cfg, tokens, pos0=pos) if cfg.pos_kind == "learned" else (
         params["embed"]["tok"][tokens]
     )
@@ -341,6 +347,45 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
 
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache), unroll=cfg.scan_unroll)
     return _logits(params, cfg, x), new_cache
+
+
+def decode_scan(params, cfg: ModelConfig, first, cache, start_pos, num_steps,
+                next_fn, step_fn=None):
+    """Fused multi-token decode: ONE ``lax.scan`` over token positions.
+
+    Runs ``num_steps`` decode steps starting at absolute position
+    ``start_pos`` (a Python int or traced scalar).  The cache threads
+    through the scan carry, so the whole generation lowers to a single
+    executable — the serving engine jits this once per shape instead of
+    dispatching (and historically re-tracing) per token.
+
+      first    : (B,) int32 — token ids fed to the first decode step
+      next_fn  : (logits (B,1,V), step i) -> (B,) int32 next token ids
+                 (sampling lives in the serving layer: greedy / temperature
+                 with per-request keys / ensemble voting all plug in here)
+      step_fn  : optional override of :func:`decode_step` with signature
+                 (params, cache, tokens (B,1), pos) -> (logits, cache);
+                 the serving engine's ensemble mode passes a vmapped
+                 population step that averages member logits.
+
+    Returns ``(tokens (B, num_steps) int32, final cache)``; ``tokens[:, i]``
+    is the id sampled *after* the step at position ``start_pos + i``.
+    """
+    if step_fn is None:
+        def step_fn(p, c, t, pos):  # noqa: E306
+            return decode_step(p, cfg, t, c, pos)
+    start_pos = jnp.asarray(start_pos, jnp.int32)
+
+    def body(carry, i):
+        nxt, c = carry
+        logits, c = step_fn(params, c, nxt[:, None], start_pos + i)
+        new = next_fn(logits, i)
+        return (new, c), new
+
+    (_, cache), toks = jax.lax.scan(
+        body, (first, cache), jnp.arange(num_steps, dtype=jnp.int32)
+    )
+    return jnp.moveaxis(toks, 0, 1), cache
 
 
 def prefill(params, cfg: ModelConfig, batch, capacity: Optional[int] = None):

@@ -1,15 +1,33 @@
-"""Serving: batched generation engine over prefill/decode."""
+"""Serving: fused scan-based batched generation engine (see README.md)."""
 
 from repro.serving.engine import (
+    MODES,
     averaged_params,
+    clear_executable_cache,
+    decode_trace_count,
+    executable_cache_size,
     generate,
     generate_from_population,
+    generate_reference,
     internal_prefix,
+    prefill_trace_count,
+    reference_trace_count,
+    reset_trace_counts,
+    serving_params,
 )
 
 __all__ = [
+    "MODES",
     "averaged_params",
+    "clear_executable_cache",
+    "decode_trace_count",
+    "executable_cache_size",
     "generate",
     "generate_from_population",
+    "generate_reference",
     "internal_prefix",
+    "prefill_trace_count",
+    "reference_trace_count",
+    "reset_trace_counts",
+    "serving_params",
 ]

@@ -1,4 +1,42 @@
-"""Batched greedy/temperature generation on top of prefill + decode_step.
+"""Fused scan-based serving engine: one compiled decode program per shape.
+
+The legacy path (kept as :func:`generate_reference` for parity tests and
+benchmarks) built a fresh ``jax.jit`` closure inside every ``generate``
+call and drove it from a Python token loop — every *request* re-traced
+``decode_step`` from scratch and every *token* paid a host dispatch plus a
+list concat.  The engine here compiles the whole generation once:
+
+  * prefill and decode are jitted top-level programs cached in a
+    module-level **executable cache** keyed on
+    ``(cfg, mode, B, S, max_new, capacity, greedy, mesh)`` — one trace per
+    shape for the lifetime of the process, reused across requests;
+  * decode runs as a single ``lax.scan`` over token positions
+    (:func:`repro.models.transformer.decode_scan`) with ``pos`` traced and
+    the ``(B, S+max_new)`` token buffer preallocated and filled in-program;
+  * the KV cache is **donated** to the decode program on backends whose
+    runtime supports buffer donation (TPU/GPU; on CPU donation is a no-op
+    and jax warns, so it is skipped there);
+  * sampling happens in-scan: greedy, or temperature sampling with
+    **per-request keys** (``jax.random.split(key, B)`` then a per-step
+    ``fold_in``), so two requests in one batch never share a sample stream;
+  * trace counters (:func:`decode_trace_count` — same pattern as
+    ``train.engine.chunk_trace_count``) let tests assert that a 64-token
+    generation compiles decode exactly once.
+
+Serving **modes** (the paper's end-of-training evaluation strategies, made
+first-class at serve time):
+
+  soup      uniform weight average of the population — single-model cost,
+            today's default (paper "Averaged").
+  member    serve member *i* unaveraged (baseline / A-B debugging).
+  ensemble  run all N members' prefill+decode under ``vmap`` and average
+            their logits (``averaging.balanced_mean``) before sampling —
+            the paper's accuracy ceiling at N× compute.
+
+Batch sharding: pass a ``mesh`` with a ``data`` axis (e.g.
+``launch.mesh.make_host_data_mesh``) and the token batch is sharded over
+the data axes while params replicate — serving scales past one chip
+without touching the program.
 
 Handles the position bookkeeping for multimodal prefixes (VLM patches are
 part of the internal sequence, so decode positions are offset by
@@ -7,20 +45,205 @@ part of the internal sequence, so decode positions are offset by
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import averaging
+from repro.core import population as pop
 from repro.models import transformer as M
 
 PyTree = Any
 
+MODES = ("soup", "member", "ensemble")
+
 
 def internal_prefix(cfg: ModelConfig) -> int:
     return cfg.num_patches if cfg.frontend == "vision" else 0
+
+
+# ---------------------------------------------------------------------------
+# trace counters + executable cache
+# ---------------------------------------------------------------------------
+
+# Counts traces of the fused decode/prefill program bodies (jit traces the
+# Python body exactly once per compiled executable, so these ARE the
+# compile counts; tests/test_serving.py asserts decode == 1 for a whole
+# generation and stays 1 across same-shape requests).
+_DECODE_TRACES = [0]
+_PREFILL_TRACES = [0]
+# Traces of the legacy reference loop's per-request jit closure.
+_REFERENCE_TRACES = [0]
+
+_EXEC_CACHE: Dict[Tuple, Callable] = {}
+
+
+def reset_trace_counts() -> None:
+    _DECODE_TRACES[0] = 0
+    _PREFILL_TRACES[0] = 0
+    _REFERENCE_TRACES[0] = 0
+
+
+def decode_trace_count() -> int:
+    return _DECODE_TRACES[0]
+
+
+def prefill_trace_count() -> int:
+    return _PREFILL_TRACES[0]
+
+
+def reference_trace_count() -> int:
+    return _REFERENCE_TRACES[0]
+
+
+def executable_cache_size() -> int:
+    return len(_EXEC_CACHE)
+
+
+def clear_executable_cache() -> None:
+    """Drop cached executables (tests use this to measure traces from cold)."""
+    _EXEC_CACHE.clear()
+
+
+def _donate(argnums):
+    """Donation argnums, or () on CPU where donation is an ignored no-op."""
+    return argnums if jax.default_backend() in ("tpu", "gpu") else ()
+
+
+# ---------------------------------------------------------------------------
+# sampling (shared by the scan program and the reference loop)
+# ---------------------------------------------------------------------------
+
+
+def _request_keys(key: Optional[jax.Array], batch: int,
+                  temperature: float) -> jax.Array:
+    """Per-request sample keys.  Greedy decoding is keyless; temperature
+    sampling REQUIRES an explicit key — a silent default key would make
+    every temperature>0 request stream identical."""
+    if temperature > 0.0:
+        if key is None:
+            raise ValueError(
+                "generate(temperature>0) requires an explicit PRNG key: a "
+                "default key would make all sampled requests identical. "
+                "Pass key=jax.random.key(...) (greedy decoding stays keyless)."
+            )
+        return jax.random.split(key, batch)
+    # unused by the greedy program; keeps one program signature per shape
+    return jax.random.split(jax.random.key(0), batch)
+
+
+def _sample(logits, keys, step, temperature, greedy: bool):
+    """Next-token ids (B,) from last-position logits (B,1,V).
+
+    ``step`` is folded into each request's key, so the stream at step t is
+    independent of max_new_tokens and of the other requests in the batch.
+    """
+    last = logits[:, -1]
+    if greedy:
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)
+    ks = jax.vmap(lambda k: jax.random.fold_in(k, step))(keys)
+    return jax.vmap(
+        lambda lg, k: jax.random.categorical(k, lg)
+    )(last.astype(jnp.float32) / temperature, ks).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# compiled programs
+# ---------------------------------------------------------------------------
+
+
+def _ensemble_step(cfg: ModelConfig):
+    """Population decode step: vmap members, average logits before sampling
+    (balanced-tree mean — same reduction as the weight soup)."""
+
+    def step(params, cache, tokens, pos):
+        lgs, cache = jax.vmap(
+            lambda p, c: M.decode_step(p, cfg, tokens, c, pos)
+        )(params, cache)
+        return averaging.balanced_mean(lgs), cache
+
+    return step
+
+
+def _build_prefill(cfg: ModelConfig, ensemble: bool, capacity: int):
+    def program(params, batch):
+        _PREFILL_TRACES[0] += 1
+        if ensemble:
+            return jax.vmap(
+                lambda p: M.prefill(p, cfg, batch, capacity=capacity)
+            )(params)
+        return M.prefill(params, cfg, batch, capacity=capacity)
+
+    return jax.jit(program)
+
+
+def _build_decode(cfg: ModelConfig, ensemble: bool, S: int, max_new: int,
+                  greedy: bool):
+    prefix = internal_prefix(cfg)
+
+    def program(params, tokens, cache, first_logits, keys, temperature):
+        _DECODE_TRACES[0] += 1
+        B = tokens.shape[0]
+        if ensemble:
+            first_logits = averaging.balanced_mean(first_logits)
+        nxt = _sample(first_logits, keys, 0, temperature, greedy)
+
+        # preallocated (B, S+max_new) output buffer: prompt + every sampled
+        # token is written in-program, no per-token host round-trip.
+        buf = jnp.zeros((B, S + max_new), jnp.int32)
+        buf = jax.lax.dynamic_update_slice(buf, tokens.astype(jnp.int32), (0, 0))
+        buf = buf.at[:, S].set(nxt)
+
+        new_toks, _ = M.decode_scan(
+            params, cfg, nxt, cache, prefix + S, max_new - 1,
+            lambda lg, i: _sample(lg, keys, i + 1, temperature, greedy),
+            step_fn=_ensemble_step(cfg) if ensemble else None,
+        )
+        return jax.lax.dynamic_update_slice(buf, new_toks, (0, S + 1))
+
+    return jax.jit(program, donate_argnums=_donate((2,)))
+
+
+def _programs(cfg: ModelConfig, ensemble: bool, B: int, S: int, max_new: int,
+              capacity: int, greedy: bool, mesh):
+    """Executable-cache lookup: one (prefill, decode) pair per shape key.
+
+    ``cfg`` is a frozen dataclass and ``mesh`` is hashable, so the key is
+    exact — a new shape compiles once, every later request with the same
+    key reuses the executable (0 additional traces)."""
+    key = ("serve", cfg, ensemble, B, S, max_new, capacity, greedy, mesh)
+    if key not in _EXEC_CACHE:
+        _EXEC_CACHE[key] = (
+            _build_prefill(cfg, ensemble, capacity),
+            _build_decode(cfg, ensemble, S, max_new, greedy),
+        )
+    return _EXEC_CACHE[key]
+
+
+def _shard_request(params, batch, keys, cfg: ModelConfig, mesh):
+    """Place the request on a serving mesh: batch over the data axes,
+    params (and sample keys) replicated.  GSPMD propagates the batch
+    sharding through prefill/decode; the KV cache comes out batch-sharded
+    without an explicit spec."""
+    from repro.sharding import rules
+
+    bspecs = rules.batch_pspecs(cfg, mesh, batch["tokens"].shape[0])
+    batch = {
+        k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
+        for k, v in batch.items()
+    }
+    rep = NamedSharding(mesh, P())
+    params = jax.tree_util.tree_map(lambda x: jax.device_put(x, rep), params)
+    keys = jax.device_put(keys, rep)
+    return params, batch, keys
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
 
 
 def averaged_params(trained: Any) -> PyTree:
@@ -35,14 +258,31 @@ def averaged_params(trained: Any) -> PyTree:
     """
     population = getattr(trained, "population", trained)
     soup = averaging.uniform_soup(population)
+    return jax.tree_util.tree_map(_gather_leaf, soup)
 
-    def _gather(x):
-        devs = getattr(getattr(x, "sharding", None), "device_set", None)
-        if devs is not None and len(devs) > 1:
-            return jnp.asarray(jax.device_get(x))
-        return x
 
-    return jax.tree_util.tree_map(_gather, soup)
+def _gather_leaf(x):
+    # shared multi-device predicate+gather (core.population.host_gather);
+    # re-wrapped as a device array so serving never feeds numpy to jit
+    return jnp.asarray(pop.host_gather(x))
+
+
+def serving_params(trained: Any, mode: str = "soup", member: int = 0) -> PyTree:
+    """Params for a serving mode from either training engine's output.
+
+    soup → averaged member; member → member *i*; ensemble → the full
+    stacked population (gathered off any training mesh so the serving
+    programs can place it on the serving mesh)."""
+    if mode not in MODES:
+        raise ValueError(f"unknown serving mode {mode!r}; expected one of {MODES}")
+    population = getattr(trained, "population", trained)
+    if mode == "soup":
+        return averaged_params(population)
+    if mode == "member":
+        return jax.tree_util.tree_map(
+            _gather_leaf, pop.member(population, member)
+        )
+    return jax.tree_util.tree_map(_gather_leaf, population)
 
 
 def generate_from_population(
@@ -52,11 +292,15 @@ def generate_from_population(
     max_new_tokens: int,
     temperature: float = 0.0,
     key: Optional[jax.Array] = None,
+    mode: str = "soup",
+    member: int = 0,
+    mesh=None,
 ) -> jax.Array:
-    """Serve the averaged model of a trained population (either engine)."""
+    """Serve a trained population (either engine) under a serving mode."""
     return generate(
-        averaged_params(trained), cfg, batch, max_new_tokens,
+        serving_params(trained, mode, member), cfg, batch, max_new_tokens,
         temperature=temperature, key=key,
+        mode="ensemble" if mode == "ensemble" else "soup", mesh=mesh,
     )
 
 
@@ -67,33 +311,83 @@ def generate(
     max_new_tokens: int,
     temperature: float = 0.0,
     key: Optional[jax.Array] = None,
+    mode: str = "soup",
+    mesh=None,
 ) -> jax.Array:
-    """batch: {"tokens": (B,S), ["patches"|"frames"]: ...} -> (B, S+max_new)."""
+    """batch: {"tokens": (B,S), ["patches"|"frames"]: ...} -> (B, S+max_new).
+
+    ``mode="soup"``/``"member"`` serve ``params`` as a single model (the
+    two differ only in how the caller picked the params); ``"ensemble"``
+    expects a stacked (N, ...) population and averages member logits
+    in-scan.  ``mesh`` (optional) shards the batch over its data axes.
+    """
+    if mode not in MODES:
+        raise ValueError(f"unknown serving mode {mode!r}; expected one of {MODES}")
+    if max_new_tokens < 1:
+        raise ValueError("max_new_tokens must be >= 1")
+    ensemble = mode == "ensemble"
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    capacity = internal_prefix(cfg) + S + max_new_tokens
+    greedy = temperature <= 0.0
+
+    keys = _request_keys(key, B, temperature)
+    if mesh is not None:
+        params, batch, keys = _shard_request(params, batch, keys, cfg, mesh)
+        tokens = batch["tokens"]
+
+    prefill_fn, decode_fn = _programs(
+        cfg, ensemble, B, S, max_new_tokens, capacity, greedy, mesh
+    )
+    logits, cache = prefill_fn(params, batch)
+    return decode_fn(params, tokens, cache, logits, keys,
+                     jnp.float32(max(temperature, 1e-6)))
+
+
+# ---------------------------------------------------------------------------
+# legacy reference loop (parity tests + serving_bench baseline)
+# ---------------------------------------------------------------------------
+
+
+def generate_reference(
+    params: PyTree,
+    cfg: ModelConfig,
+    batch: Dict[str, jax.Array],
+    max_new_tokens: int,
+    temperature: float = 0.0,
+    key: Optional[jax.Array] = None,
+) -> jax.Array:
+    """The pre-engine serving path, preserved verbatim in structure: a fresh
+    ``jax.jit`` closure per request (so decode re-traces on EVERY call —
+    count it via :func:`reference_trace_count`) and a Python loop with one
+    host dispatch and a list append per token.  Sampling uses the same
+    per-request fold-in scheme as the scan program, so the two paths are
+    token-parity-comparable under a fixed key (tests/test_serving.py
+    asserts bitwise equality).  Do not use in serving — this exists as the
+    benchmark baseline and the parity oracle for :func:`generate`.
+    """
     tokens = batch["tokens"]
     B, S = tokens.shape
     prefix = internal_prefix(cfg)
     capacity = prefix + S + max_new_tokens
+    greedy = temperature <= 0.0
+    keys = _request_keys(key, B, temperature)
+    temp = jnp.float32(max(temperature, 1e-6))
 
     logits, cache = M.prefill(params, cfg, batch, capacity=capacity)
 
-    def sample(lg, k):
-        if temperature <= 0.0:
-            return jnp.argmax(lg[:, -1], axis=-1)
-        return jax.random.categorical(k, lg[:, -1] / temperature)
+    def _counted_decode(p, t, c, pos):
+        _REFERENCE_TRACES[0] += 1
+        return M.decode_step(p, cfg, t, c, pos)
 
-    decode = jax.jit(
-        lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos)
-    )
+    decode = jax.jit(_counted_decode)  # fresh closure: re-traced per request
 
-    out = [tokens]
-    k = key if key is not None else jax.random.key(0)
-    nxt = sample(logits, k)
+    out = [tokens.astype(jnp.int32)]
+    nxt = _sample(logits, keys, 0, temp, greedy)
     for i in range(max_new_tokens):
         out.append(nxt[:, None])
         if i == max_new_tokens - 1:
             break
-        pos = prefix + S + i
-        logits, cache = decode(params, nxt[:, None], cache, pos)
-        k = jax.random.fold_in(k, i)
-        nxt = sample(logits, k)
+        logits, cache = decode(params, nxt[:, None], cache, prefix + S + i)
+        nxt = _sample(logits, keys, i + 1, temp, greedy)
     return jnp.concatenate(out, axis=1)

@@ -8,21 +8,10 @@ from typing import Any
 import jax
 import numpy as np
 
+from repro.core.population import host_gather
+
 PyTree = Any
 _SEP = "::"
-
-
-def _gather(leaf):
-    """Explicitly fetch a leaf to host memory before ``np.asarray``.
-
-    The fused shard_map engine returns populations whose leaves are
-    sharded over several devices; ``np.asarray`` on those either errors
-    (non-fully-addressable arrays) or triggers an implicit cross-device
-    transfer inside numpy.  ``jax.device_get`` assembles the shards
-    explicitly on the host instead."""
-    if isinstance(leaf, jax.Array) and len(leaf.sharding.device_set) > 1:
-        return jax.device_get(leaf)
-    return leaf
 
 
 def _flat_paths(tree: PyTree):
@@ -32,7 +21,9 @@ def _flat_paths(tree: PyTree):
         key = _SEP.join(
             str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
         )
-        out[key] = np.asarray(_gather(leaf))
+        # multi-device leaves (fused shard_map engine output) are gathered
+        # explicitly before np.asarray sees them
+        out[key] = np.asarray(host_gather(leaf))
     return out
 
 
@@ -49,7 +40,16 @@ def save(path: str, tree: PyTree) -> str:
 
 
 def restore(path: str, like: PyTree) -> PyTree:
-    """Restore into the structure of ``like`` (shapes must match)."""
+    """Restore into the structure of ``like`` (shapes must match).
+
+    Leaves come off the npz as host numpy; whenever the matching ``like``
+    leaf is a committed ``jax.Array`` the restored leaf is ``device_put``
+    onto that leaf's sharding.  Without this, feeding a restored population
+    straight into the fused shard_map engine works but silently re-uploads
+    (and for multi-device shardings re-shards) every leaf on each step —
+    the round-trip must hand back device arrays in the original layout.
+    ``like`` trees made of plain numpy leaves restore to numpy, unchanged.
+    """
     data = np.load(path if path.endswith(".npz") else path + ".npz")
     flat, treedef = jax.tree_util.tree_flatten_with_path(like)
     leaves = []
@@ -57,5 +57,8 @@ def restore(path: str, like: PyTree) -> PyTree:
         key = _SEP.join(str(q.key) if hasattr(q, "key") else str(q.idx) for q in p)
         arr = data[key]
         assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
-        leaves.append(arr.astype(leaf.dtype))
+        arr = arr.astype(leaf.dtype)
+        if isinstance(leaf, jax.Array):
+            arr = jax.device_put(arr, leaf.sharding)
+        leaves.append(arr)
     return jax.tree_util.tree_unflatten(treedef, leaves)

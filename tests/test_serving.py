@@ -1,0 +1,241 @@
+"""Fused scan-based serving engine (repro/serving/engine.py).
+
+Contracts under test:
+  * the scan program is token-bitwise-identical to the legacy per-token
+    Python loop (greedy AND fixed-key temperature, text and vision-prefix
+    configs) — the rewrite changes dispatch structure, not results;
+  * decode compiles exactly ONCE per shape, no matter how many tokens are
+    generated or how many same-shape requests follow (executable cache);
+    the legacy loop's fresh-closure retrace per request is pinned as the
+    bug it was;
+  * ensemble mode averages member logits (balanced-tree mean, same
+    reduction as the weight soup) before sampling;
+  * temperature > 0 requires an explicit key (a silent default key made
+    every sampled request identical); greedy stays keyless;
+  * checkpoint.restore hands back device arrays on ``like``'s sharding.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.core import averaging
+from repro.core import population as pop
+from repro.models import transformer as M
+from repro.serving import engine as serving
+from repro.train import checkpoint
+
+KEY = jax.random.key(0)
+
+TEXT_CFG = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                       d_ff=64, vocab_size=50, dtype="float32")
+VLM_CFG = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=50, frontend="vision",
+                      num_patches=3, dtype="float32")
+
+
+def _setup(cfg, batch_size=2, prompt_len=5):
+    params = M.init_params(KEY, cfg)
+    batch = {"tokens": jax.random.randint(KEY, (batch_size, prompt_len), 0,
+                                          cfg.vocab_size)}
+    if cfg.frontend == "vision":
+        batch["patches"] = jax.random.normal(
+            jax.random.fold_in(KEY, 1), (batch_size, cfg.num_patches, cfg.d_model)
+        )
+    return params, batch
+
+
+@pytest.fixture(autouse=True)
+def _fresh_engine():
+    serving.reset_trace_counts()
+    serving.clear_executable_cache()
+    yield
+    serving.clear_executable_cache()
+
+
+# ---------------------------------------------------------------------------
+# scan vs legacy loop parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("cfg", [TEXT_CFG, VLM_CFG], ids=["text", "vlm"])
+@pytest.mark.parametrize("temperature", [0.0, 0.8], ids=["greedy", "temp"])
+def test_scan_matches_python_loop(cfg, temperature):
+    params, batch = _setup(cfg)
+    key = jax.random.key(7) if temperature > 0 else None
+    ref = serving.generate_reference(params, cfg, batch, 6,
+                                     temperature=temperature, key=key)
+    out = serving.generate(params, cfg, batch, 6,
+                           temperature=temperature, key=key)
+    assert out.shape == ref.shape
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(out))
+
+
+def test_greedy_matches_teacher_forced_argmax():
+    """The scan engine keeps the old KV-cache correctness contract."""
+    params, batch = _setup(TEXT_CFG)
+    out = serving.generate(params, TEXT_CFG, batch, 6)
+    full_logits, _ = M.forward_logits(params, TEXT_CFG, {"tokens": out})
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(full_logits[:, 4:-1], -1)), np.asarray(out[:, 5:])
+    )
+
+
+def test_temperature_streams_are_per_request():
+    """Requests in one batch must not share a sample stream: serving the
+    same prompt at rows 0 and 1 under temperature draws different tokens
+    (per-request split keys), yet the whole batch stays deterministic."""
+    params, _ = _setup(TEXT_CFG)
+    prompt = jax.random.randint(KEY, (1, 5), 0, TEXT_CFG.vocab_size)
+    batch = {"tokens": jnp.tile(prompt, (2, 1))}
+    out1 = serving.generate(params, TEXT_CFG, batch, 24, temperature=1.5,
+                            key=jax.random.key(3))
+    out2 = serving.generate(params, TEXT_CFG, batch, 24, temperature=1.5,
+                            key=jax.random.key(3))
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert not np.array_equal(np.asarray(out1[0]), np.asarray(out1[1]))
+
+
+# ---------------------------------------------------------------------------
+# compile-count contract
+# ---------------------------------------------------------------------------
+
+
+def test_decode_compiles_once_for_64_tokens():
+    params, batch = _setup(TEXT_CFG)
+    serving.generate(params, TEXT_CFG, batch, 64)
+    assert serving.decode_trace_count() == 1
+    assert serving.prefill_trace_count() == 1
+    # same-shape requests reuse the cached executable: still one trace
+    for _ in range(3):
+        serving.generate(params, TEXT_CFG, batch, 64)
+    assert serving.decode_trace_count() == 1
+    # a new shape compiles once more
+    serving.generate(params, TEXT_CFG, batch, 32)
+    assert serving.decode_trace_count() == 2
+    assert serving.executable_cache_size() == 2
+
+
+def test_reference_loop_retraces_every_request():
+    """The bug the engine fixes, pinned: the legacy path re-traced decode
+    on every generate() call (fresh jit closure per request)."""
+    params, batch = _setup(TEXT_CFG)
+    for _ in range(3):
+        serving.generate_reference(params, TEXT_CFG, batch, 4)
+    assert serving.reference_trace_count() == 3
+
+
+# ---------------------------------------------------------------------------
+# key discipline
+# ---------------------------------------------------------------------------
+
+
+def test_temperature_requires_explicit_key():
+    params, batch = _setup(TEXT_CFG)
+    with pytest.raises(ValueError, match="explicit PRNG key"):
+        serving.generate(params, TEXT_CFG, batch, 4, temperature=0.5)
+    with pytest.raises(ValueError, match="explicit PRNG key"):
+        serving.generate_reference(params, TEXT_CFG, batch, 4, temperature=0.5)
+    # greedy stays keyless
+    serving.generate(params, TEXT_CFG, batch, 4)
+
+
+# ---------------------------------------------------------------------------
+# serving modes
+# ---------------------------------------------------------------------------
+
+
+def _population(cfg, n=3):
+    return jax.vmap(lambda k: M.init_params(k, cfg))(jax.random.split(KEY, n))
+
+
+def test_ensemble_logits_are_mean_of_member_logits():
+    cfg = TEXT_CFG
+    popn = _population(cfg)
+    _, batch = _setup(cfg)
+    out = serving.generate(popn, cfg, batch, 6, mode="ensemble")
+
+    # reference: legacy-style loop over vmapped members + balanced mean
+    B, S = batch["tokens"].shape
+    capacity = S + 6
+    logits, cache = jax.vmap(
+        lambda p: M.prefill(p, cfg, batch, capacity=capacity)
+    )(popn)
+    nxt = jnp.argmax(averaging.balanced_mean(logits)[:, -1], -1).astype(jnp.int32)
+    toks = [nxt]
+    for i in range(5):
+        logits, cache = jax.vmap(
+            lambda p, c: M.decode_step(p, cfg, nxt[:, None], c, S + i)
+        )(popn, cache)
+        nxt = jnp.argmax(
+            averaging.balanced_mean(logits)[:, -1], -1
+        ).astype(jnp.int32)
+        toks.append(nxt)
+    expect = jnp.concatenate(
+        [batch["tokens"].astype(jnp.int32)] + [t[:, None] for t in toks], axis=1
+    )
+    np.testing.assert_array_equal(np.asarray(expect), np.asarray(out))
+    # and the balanced mean tracks jnp.mean to float tolerance
+    np.testing.assert_allclose(
+        np.asarray(averaging.balanced_mean(logits)),
+        np.asarray(jnp.mean(logits, axis=0)), rtol=1e-6, atol=1e-6,
+    )
+
+
+def test_member_and_soup_modes_route_params():
+    cfg = TEXT_CFG
+    popn = _population(cfg)
+    _, batch = _setup(cfg)
+    out_m = serving.generate_from_population(popn, cfg, batch, 5,
+                                             mode="member", member=1)
+    direct = serving.generate(pop.member(popn, 1), cfg, batch, 5)
+    np.testing.assert_array_equal(np.asarray(out_m), np.asarray(direct))
+
+    out_s = serving.generate_from_population(popn, cfg, batch, 5, mode="soup")
+    soup = serving.generate(serving.averaged_params(popn), cfg, batch, 5)
+    np.testing.assert_array_equal(np.asarray(out_s), np.asarray(soup))
+
+    with pytest.raises(ValueError, match="unknown serving mode"):
+        serving.generate(popn, cfg, batch, 5, mode="greedy_soup")
+
+
+def test_data_mesh_serving_matches_unsharded():
+    """Batch sharding over a data mesh is a layout change, not a math
+    change (degenerate 1-device mesh in the main pytest process)."""
+    from repro.launch.mesh import make_host_data_mesh
+
+    params, batch = _setup(TEXT_CFG, batch_size=4)
+    mesh = make_host_data_mesh()
+    plain = serving.generate(params, TEXT_CFG, batch, 6)
+    meshed = serving.generate(params, TEXT_CFG, batch, 6, mesh=mesh)
+    np.testing.assert_array_equal(np.asarray(plain), np.asarray(meshed))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint restore sharding
+# ---------------------------------------------------------------------------
+
+
+def test_restore_places_leaves_on_likes_sharding(tmp_path):
+    """restore() must hand back committed device arrays in ``like``'s
+    layout (host numpy leaves caused implicit per-step transfers when a
+    restored population fed the fused engine); numpy ``like`` trees keep
+    restoring to numpy."""
+    import os
+
+    popn = _population(TEXT_CFG, n=2)
+    path = checkpoint.save(os.path.join(tmp_path, "pop"), popn)
+
+    back = checkpoint.restore(path, popn)
+    for a, b in zip(jax.tree_util.tree_leaves(popn),
+                    jax.tree_util.tree_leaves(back)):
+        assert isinstance(b, jax.Array)
+        assert b.sharding == a.sharding
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    like_np = jax.tree_util.tree_map(np.asarray, popn)
+    back_np = checkpoint.restore(path, like_np)
+    assert all(isinstance(leaf, np.ndarray)
+               for leaf in jax.tree_util.tree_leaves(back_np))

@@ -452,6 +452,18 @@ def test_checkpoint_roundtrip_sharded_population():
         back = checkpoint.restore(written, like)
         for a, b in zip(leaves_np(res.population), leaves_np(back)):
             np.testing.assert_array_equal(a, b)
+        # restore with the sharded population as `like`: leaves come back
+        # as committed device arrays on the ORIGINAL multi-device sharding
+        # (not host numpy), so re-feeding the fused engine costs no
+        # per-step implicit transfer.
+        back_dev = checkpoint.restore(written, res.population)
+        for a, b in zip(jax.tree_util.tree_leaves(res.population),
+                        jax.tree_util.tree_leaves(back_dev)):
+            assert isinstance(b, jax.Array)
+            assert b.sharding == a.sharding
+            assert len(b.sharding.device_set) > 1
+        for a, b in zip(leaves_np(res.population), leaves_np(back_dev)):
+            np.testing.assert_array_equal(a, b)
         print("OK checkpoint roundtrip")
         """)
     assert "OK checkpoint roundtrip" in out
