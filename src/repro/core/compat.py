@@ -61,6 +61,13 @@ def make_mesh(shape, axes):
     return Mesh(mesh_utils.create_device_mesh(shape), axes)
 
 
+def donate_argnums(argnums):
+    """Buffer-donation argnums, or () on CPU where donation is an ignored
+    no-op that only triggers a jax warning.  Shared by both serving
+    runtimes (scan engine and continuous batching)."""
+    return argnums if jax.default_backend() in ("tpu", "gpu") else ()
+
+
 def resolve_interpret(interpret) -> bool:
     """Pallas ``interpret=None`` → auto-detect: compile the kernel on TPU,
     interpret everywhere else (CPU containers).  Explicit bools pass

@@ -12,6 +12,7 @@ import functools
 import jax
 
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.rwkv6_scan import rwkv6_scan_pallas
 from repro.kernels.wash_shuffle import (
     bucketed_shuffle_pallas,
@@ -45,3 +46,10 @@ def flash_attention(
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
 def rwkv6_scan(r, k, v, w, u, chunk: int = 16, interpret=None):
     return rwkv6_scan_pallas(r, k, v, w, u, chunk=chunk, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pool, v_pool, page_table, lengths, interpret=None):
+    return paged_attention_pallas(
+        q, k_pool, v_pool, page_table, lengths, interpret=interpret
+    )

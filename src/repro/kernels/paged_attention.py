@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: paged-attention decode over a block-pool KV cache.
+
+The continuous-batching runtime (``repro.serving.batching``) stores KV in a
+shared pool of fixed-size pages, ``(num_pages, page_size, KV, hd)``, with a
+per-slot **page table** mapping logical context positions to pool pages.
+Decode-time attention then needs a gather of each slot's pages followed by
+a masked attend — two HBM passes when written naively in jnp (materialize
+``(B, max_pages·page_size, KV, hd)``, then attend).
+
+This kernel fuses the gather INTO the attend: the page table rides in as a
+**scalar-prefetch** operand (``pltpu.PrefetchScalarGridSpec``), so the
+BlockSpec index map dereferences ``page_table[slot, j]`` and the DMA engine
+streams exactly the pages each slot owns from HBM into VMEM — no
+contiguous copy of the context ever exists.  Accumulation across a slot's
+pages is the standard streaming softmax (running max / sum / accumulator
+in VMEM scratch, carried across the sequential page axis of the grid).
+
+Layout per grid step ``(b·KV + k, j)``: one (slot, kv-head) pair holds its
+``g = H // KV`` query rows in VMEM and visits page ``page_table[b, j]``.
+Pages past a slot's length are skipped with ``pl.when`` (no DMA'd page is
+wasted on fully-masked work beyond the first); intra-page tail positions
+are masked with position arithmetic.
+
+``interpret=None`` auto-detects like ``wash_shuffle``: compiled on TPU,
+interpret mode elsewhere (CPU timings are correctness-only).  The pure-jnp
+oracle is :func:`repro.kernels.ref.paged_attention_ref`, parity-asserted
+in ``tests/test_kernels.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.compat import resolve_interpret
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(
+    pt_ref, len_ref,          # scalar-prefetch: (B, max_pages) int32, (B,) int32
+    q_ref, k_ref, v_ref,      # (g, hd), (page_size, hd), (page_size, hd)
+    o_ref,                    # (g, hd)
+    acc_ref, m_ref, l_ref,    # VMEM scratch: (g, hd), (g, 1), (g, 1)
+    *, kv: int, page_size: int, scale: float,
+):
+    j = pl.program_id(1)
+    b = pl.program_id(0) // kv
+    length = len_ref[b]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # skip pages wholly past this slot's context (their DMA already
+    # happened, but no VPU/MXU work is spent on fully-masked scores)
+    @pl.when(j * page_size < length)
+    def _page():
+        g = q_ref.shape[0]
+        q = q_ref[...].astype(jnp.float32) * scale
+        k = k_ref[...].astype(jnp.float32)
+        scores = q @ k.T  # (g, page_size)
+        tpos = j * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (g, page_size), 1
+        )
+        scores = jnp.where(tpos < length, scores, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + p @ v_ref[...].astype(jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _emit():
+        o_ref[...] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-20)
+        ).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    page_table: jax.Array,
+    lengths: jax.Array,
+    *,
+    interpret: Optional[bool] = None,
+) -> jax.Array:
+    """One-token paged attention for a batch of serving slots.
+
+      q          : (B, H, hd)   — the current token's query per slot
+      k_pool     : (P, page_size, KV, hd) — shared K page pool
+      v_pool     : (P, page_size, KV, hd) — shared V page pool
+      page_table : (B, max_pages) int32 — pool page id per logical page
+                   (unused tail entries may point anywhere; they are masked)
+      lengths    : (B,) int32 — valid context tokens per slot (>= 1)
+
+    Returns (B, H, hd).  GQA: ``H % KV == 0``; queries are grouped by kv
+    head exactly as :func:`repro.models.layers.sdpa` groups them.
+    """
+    B, H, hd = q.shape
+    P, page_size, KV, _ = k_pool.shape
+    max_pages = page_table.shape[1]
+    g = H // KV
+    scale = hd ** -0.5
+
+    qh = q.reshape(B * KV, g, hd)
+    kernel = functools.partial(
+        _paged_kernel, kv=KV, page_size=page_size, scale=scale
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KV, max_pages),
+        in_specs=[
+            pl.BlockSpec((None, g, hd), lambda h, j, pt, ln: (h, 0, 0)),
+            pl.BlockSpec(
+                (None, page_size, None, hd),
+                lambda h, j, pt, ln: (pt[h // KV, j], 0, h % KV, 0),
+            ),
+            pl.BlockSpec(
+                (None, page_size, None, hd),
+                lambda h, j, pt, ln: (pt[h // KV, j], 0, h % KV, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec((None, g, hd), lambda h, j, pt, ln: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, hd), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * KV, g, hd), q.dtype),
+        interpret=resolve_interpret(interpret),
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qh, k_pool, v_pool)
+    return out.reshape(B, H, hd)

@@ -34,6 +34,30 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None) -> jax.Array:
     return out.reshape(B, S, H, hd).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths) -> jax.Array:
+    """Gather-then-attend oracle for the paged decode kernel.
+
+    q: (B,H,hd); k_pool/v_pool: (P,page_size,KV,hd);
+    page_table: (B,max_pages) int32; lengths: (B,) int32 -> (B,H,hd).
+
+    Materializes each slot's context contiguously (the two-pass form the
+    kernel fuses away) and applies a plain masked softmax — same grouping
+    and float32 reductions as ``models.layers.sdpa``.
+    """
+    B, H, hd = q.shape
+    _, page_size, KV, _ = k_pool.shape
+    g = H // KV
+    k = k_pool[page_table].reshape(B, -1, KV, hd)  # (B, max_pages*ps, KV, hd)
+    v = v_pool[page_table].reshape(B, -1, KV, hd)
+    qf = q.reshape(B, KV, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qf, k.astype(jnp.float32)) / (hd ** 0.5)
+    valid = jnp.arange(k.shape[1]) < lengths[:, None]  # (B, ctx)
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 def rwkv6_scan_ref(r, k, v, w, u) -> jax.Array:
     """r/k/v/w: (B,T,H,hd); u: (H,hd) -> y (B,T,H,hd)."""
     B, T, H, hd = r.shape

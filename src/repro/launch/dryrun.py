@@ -441,21 +441,44 @@ def lower_pair(arch_id: str, shape_name: str, multi_pod: bool, wash: int = 0,
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default=None)
-    ap.add_argument("--shape", default=None)
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--wash", type=int, default=0, help="population size (ens axis)")
+    ap = argparse.ArgumentParser(
+        description="Multi-pod dry-run: lower + compile every "
+                    "(arch x shape x mesh) pair and emit roofline terms",
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter,
+    )
+    ap.add_argument("--arch", default=None,
+                    help="architecture name from repro.configs (omit with "
+                         "--all to sweep every arch)")
+    ap.add_argument("--shape", default=None,
+                    help="input shape name: train_4k, prefill_32k, "
+                         "decode_32k, long_500k (omit with --all to sweep)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="use the 2x16x16 multi-pod mesh instead of the "
+                         "single-pod 16x16")
+    ap.add_argument("--wash", type=int, default=0,
+                    help="population size (ens axis); 0 = no population, "
+                         "plain data/model parallel compile")
     ap.add_argument("--mixing", default="wash",
                     choices=["wash", "wash_opt", "papa", "papa_all",
-                             "wash_local", "wash_opt_local"])
-    ap.add_argument("--full-unroll", action="store_true")
-    ap.add_argument("--all", action="store_true")
-    ap.add_argument("--out-dir", default="benchmarks/dryrun")
-    ap.add_argument("--attn-impl", default=None, choices=["naive", "chunked"])
-    ap.add_argument("--attn-chunk", type=int, default=None)
-    ap.add_argument("--remat", action="store_true")
-    ap.add_argument("--moe-impl", default=None, choices=["global", "grouped"])
+                             "wash_local", "wash_opt_local"],
+                    help="mixing op compiled into the WASH step; *_local "
+                         "variants build per-parameter-shard plans "
+                         "(core.shardplan)")
+    ap.add_argument("--full-unroll", action="store_true",
+                    help="unroll all layers instead of the depth-1/depth-2 "
+                         "extrapolation (slow; exact for WASH traffic)")
+    ap.add_argument("--all", action="store_true",
+                    help="sweep every (arch x shape) pair")
+    ap.add_argument("--out-dir", default="benchmarks/dryrun",
+                    help="directory for the per-pair JSON records")
+    ap.add_argument("--attn-impl", default=None, choices=["naive", "chunked"],
+                    help="override cfg.attn_impl for the compile")
+    ap.add_argument("--attn-chunk", type=int, default=None,
+                    help="override cfg.attn_chunk (kv-chunk size)")
+    ap.add_argument("--remat", action="store_true",
+                    help="activation-checkpoint each block (training shapes)")
+    ap.add_argument("--moe-impl", default=None, choices=["global", "grouped"],
+                    help="override cfg.moe_impl for MoE archs")
     ap.add_argument("--hints", action="store_true",
                     help="enable in-model GSPMD sharding constraints")
     ap.add_argument("--tag", default=None, help="suffix for the output file")

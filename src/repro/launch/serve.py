@@ -1,8 +1,17 @@
-"""CLI launcher: serve a WASH population through the fused scan engine.
+"""CLI launcher: serve a WASH population (scan engine or continuous batching).
 
 Loads (or random-inits / quick-trains) a population of the assigned
-architecture and serves batches of synthetic prompts under a serving mode,
-reporting tokens/sec and the engine's compile behavior.  Examples:
+architecture and serves synthetic prompts under a serving mode, reporting
+tokens/sec and the engine's compile behavior.  Two runtimes:
+
+  * default — the fused scan engine (`repro.serving.engine`): one compiled
+    decode program per request shape, for shape-uniform batches;
+  * ``--continuous`` — the continuous-batching runtime over a paged KV
+    cache (`repro.serving.batching`): a mixed-length request stream is
+    admitted into ``--max-slots`` slots and decoded with exactly one
+    compiled step program, page tables and all lengths traced.
+
+Copy-pasteable examples:
 
   python -m repro.launch.serve --arch llama3.2-3b --reduced \\
       --population 4 --mode soup --batch-size 8 --max-new 32
@@ -11,6 +20,9 @@ reporting tokens/sec and the engine's compile behavior.  Examples:
       --temperature 0.7 --seed 3 --mesh data
 
   python -m repro.launch.serve --arch llama3.2-3b --reduced --compare
+
+  python -m repro.launch.serve --arch llama3.2-3b --reduced --continuous \\
+      --requests 16 --max-slots 4 --page-size 16 --max-new 32
 
 ``--ckpt`` restores a *population* checkpoint (a stacked pytree written by
 ``repro.train.checkpoint.save``, e.g. ``--ckpt-population`` from the train
@@ -24,12 +36,14 @@ import argparse
 import time
 
 import jax
+import numpy as np
 
 from repro.configs import get_arch
 from repro.configs.base import TrainConfig
 from repro.core.mixing import MixingConfig
 from repro.launch.specs import concrete_batch
 from repro.models import transformer as M
+from repro.serving import batching
 from repro.serving import engine as serving
 from repro.train import checkpoint, train_population
 
@@ -100,29 +114,118 @@ def _serve_once(popn, cfg, batch, args, mode, mesh, key):
     return out
 
 
+def mixed_stream(cfg, n_requests: int, max_prompt: int, max_new: int,
+                 seed: int, temperature: float = 0.0,
+                 share_prefix_every: int = 0):
+    """A synthetic mixed-length request stream: prompt lengths and token
+    budgets drawn uniformly, per-request keys when sampling — the traffic
+    shape the static engine cannot serve without padding or re-compiling.
+
+    ``share_prefix_every=k`` makes every k-th request reuse one common
+    prompt prefix, so the runtime's prefix-page dedup has something to
+    find (benchmarks use this; the CLI default leaves prompts independent).
+    The single source of the traffic shape — ``benchmarks/serving_bench``
+    consumes this function, so the CLI and the bench measure one stream.
+    """
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, cfg.vocab_size, size=(max_prompt,)).astype(np.int32)
+    reqs = []
+    for i in range(n_requests):
+        S = int(rng.integers(max(2, max_prompt // 4), max_prompt + 1))
+        mn = int(rng.integers(max(1, max_new // 4), max_new + 1))
+        if share_prefix_every and i % share_prefix_every == 0:
+            prompt = common[:S].copy()
+        else:
+            prompt = rng.integers(0, cfg.vocab_size, size=(S,)).astype(np.int32)
+        key = jax.random.key(1000 + i) if temperature > 0 else None
+        reqs.append(batching.Request(i, prompt, mn, key=key))
+    return reqs
+
+
+def _serve_continuous(popn, cfg, args):
+    # page-table width = the stream's worst-case context, not the whole
+    # pool: the attend is O(max_pages_per_slot * page_size) per slot
+    max_pages = -(-(args.seq_len + args.max_new) // args.page_size)
+    server = batching.ContinuousServer.from_trained(
+        popn, cfg, mode=args.mode, member=args.member,
+        temperature=args.temperature, page_size=args.page_size,
+        max_slots=args.max_slots, num_pages=args.num_pages,
+        max_pages_per_slot=max_pages,
+    )
+    reqs = mixed_stream(cfg, args.requests, args.seq_len, args.max_new,
+                        args.seed, args.temperature)
+    batching.reset_trace_counts()
+    t0 = time.time()
+    out = server.run(reqs)
+    dt = max(time.time() - t0, 1e-9)
+    toks = sum(r.max_new for r in reqs)
+    st = server.stats
+    print(f"continuous mode={args.mode} requests={len(reqs)} "
+          f"slots={args.max_slots} page_size={args.page_size} "
+          f"pool={args.num_pages}")
+    print(f"  {toks / dt:9.1f} tok/s  ({dt:.2f}s stream, "
+          f"{st['decode_steps']} decode steps, "
+          f"decode traces {batching.decode_trace_count()}, "
+          f"prefill traces {batching.prefill_trace_count()})")
+    print(f"  pages: allocated {st['pages_allocated']}, "
+          f"shared {st['pages_shared']}, peak {st['peak_pages_in_use']}")
+    assert len(out) == len(reqs)
+    return out
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--population", type=int, default=4)
-    ap.add_argument("--mode", default="soup", choices=list(serving.MODES))
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter,
+    )
+    ap.add_argument("--arch", required=True,
+                    help="architecture name from repro.configs (e.g. "
+                         "llama3.2-3b, qwen3-4b)")
+    ap.add_argument("--reduced", action="store_true",
+                    help="serve the reduced (CPU-scale) config variant")
+    ap.add_argument("--population", type=int, default=4,
+                    help="population size N (members to init/restore)")
+    ap.add_argument("--mode", default="soup", choices=list(serving.MODES),
+                    help="serving mode: soup (1x cost), member (one member), "
+                         "ensemble (Nx decode, averaged logits)")
     ap.add_argument("--member", type=int, default=0,
                     help="which member --mode member serves")
     ap.add_argument("--mesh", default="none", choices=["none", "data"],
                     help="data: shard the request batch over every host "
-                         "device (launch.mesh.make_host_data_mesh)")
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--max-new", type=int, default=32)
-    ap.add_argument("--batch-size", type=int, default=8)
-    ap.add_argument("--seq-len", type=int, default=32)
-    ap.add_argument("--seed", type=int, default=0)
+                         "device (launch.mesh.make_host_data_mesh); static "
+                         "engine only")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy (keyless)")
+    ap.add_argument("--max-new", type=int, default=32,
+                    help="new tokens per request (continuous: the maximum "
+                         "of the per-request budget range)")
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="static engine: requests per shape-uniform batch")
+    ap.add_argument("--seq-len", type=int, default=32,
+                    help="prompt length (continuous: the maximum of the "
+                         "per-request prompt-length range)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for weights, prompts, and stream shape")
     ap.add_argument("--ckpt", default=None,
-                    help="restore a stacked-population .npz")
+                    help="restore a stacked-population .npz (from "
+                         "launch.train --ckpt-population)")
     ap.add_argument("--train-steps", type=int, default=0,
                     help="quick-train the population this many steps first")
     ap.add_argument("--compare", action="store_true",
-                    help="serve the same batch under every mode (the "
-                         "soup-vs-ensemble accuracy/latency trade, measured)")
+                    help="static engine: serve the same batch under every "
+                         "mode (the soup-vs-ensemble trade, measured)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="serve a mixed-length request stream through the "
+                         "continuous-batching paged-KV runtime")
+    ap.add_argument("--requests", type=int, default=16,
+                    help="continuous: number of requests in the stream")
+    ap.add_argument("--max-slots", type=int, default=4,
+                    help="continuous: in-flight request slots (the decode "
+                         "step's batch size)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="continuous: tokens per KV page")
+    ap.add_argument("--num-pages", type=int, default=256,
+                    help="continuous: KV page-pool size shared by all slots")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -135,6 +238,13 @@ def main(argv=None):
         sample_key = None
 
     popn = _population(args, cfg, key)
+
+    if args.continuous:
+        if args.mesh != "none":
+            ap.error("--continuous does not take --mesh (single-host runtime)")
+        _serve_continuous(popn, cfg, args)
+        return
+
     batch = concrete_batch(cfg, jax.random.fold_in(key, 2),
                            args.batch_size, args.seq_len)
 
@@ -153,8 +263,6 @@ def main(argv=None):
     outs = {m: _serve_once(popn, cfg, batch, args, m, mesh, sample_key)
             for m in modes}
     if args.compare:
-        import numpy as np
-
         soup, ens = np.asarray(outs["soup"]), np.asarray(outs["ensemble"])
         agree = float((soup[:, args.seq_len:] == ens[:, args.seq_len:]).mean())
         print(f"soup/ensemble token agreement: {agree:.0%}")

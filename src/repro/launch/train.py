@@ -1,13 +1,19 @@
 """CLI launcher: train a WASH population of any assigned architecture.
 
 CPU-scale entry point (reduced configs train locally; full configs are
-exercised through the dry-run).  Example:
+exercised through the dry-run).  Copy-pasteable examples:
 
   python -m repro.launch.train --arch llama3.2-3b --reduced \\
       --population 4 --mixing wash --base-p 0.01 --steps 200
 
   python -m repro.launch.train --arch qwen3-4b --reduced --mixing papa \\
       --steps 100 --optimizer adamw --lr 3e-4
+
+  python -m repro.launch.train --arch llama3.2-3b --reduced \\
+      --engine shard_map --mesh ens_dp --steps 50 \\
+      --ckpt-population /tmp/pop.npz
+
+Every flag is documented with its default: ``--help``.
 """
 
 from __future__ import annotations
@@ -31,22 +37,36 @@ from repro.train import checkpoint, train_population
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap = argparse.ArgumentParser(
+        description=__doc__.splitlines()[0],
+        formatter_class=argparse.ArgumentDefaultsHelpFormatter,
+    )
+    ap.add_argument("--arch", required=True,
+                    help="architecture name from repro.configs (e.g. "
+                         "llama3.2-3b, qwen3-4b, deepseek-v2-lite-16b)")
     ap.add_argument("--reduced", action="store_true",
                     help="train the reduced (CPU-scale) variant")
-    ap.add_argument("--population", type=int, default=4)
+    ap.add_argument("--population", type=int, default=4,
+                    help="population size N (members trained in parallel)")
     ap.add_argument("--mixing", default="wash",
-                    choices=["none", "wash", "wash_opt", "papa", "papa_all"])
-    ap.add_argument("--base-p", type=float, default=0.01)
+                    choices=["none", "wash", "wash_opt", "papa", "papa_all"],
+                    help="mixing method: wash (paper Eq. 3), wash_opt "
+                         "(shuffle optimizer moments too), papa/papa_all "
+                         "(parameter-averaging baselines), none")
+    ap.add_argument("--base-p", type=float, default=0.01,
+                    help="WASH base shuffle probability p (paper Eq. 6)")
     ap.add_argument("--schedule", default="decreasing",
-                    choices=["decreasing", "constant", "increasing"])
-    ap.add_argument("--mode", default="dense", choices=["dense", "bucketed"])
+                    choices=["decreasing", "constant", "increasing"],
+                    help="layer-wise shuffle-probability schedule")
+    ap.add_argument("--mode", default="dense", choices=["dense", "bucketed"],
+                    help="shuffle plan mode: dense per-coordinate permutes "
+                         "or bucketed cyclic shifts (TPU-native)")
     ap.add_argument("--engine", default="vmap", choices=["vmap", "shard_map"],
                     help="vmap: two-jit reference loop; shard_map: fused "
                          "single-jit collective engine (forces bucketed "
                          "plans for wash kinds)")
-    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--steps", type=int, default=200,
+                    help="total optimizer steps per member")
     ap.add_argument("--record-every", type=int, default=None,
                     help="history record period (default: steps // 10); also "
                          "the fused engine's chunk window length")
@@ -68,17 +88,25 @@ def main(argv=None):
                     help="apply bucketed shuffles through the fused Pallas "
                          "kernel (kernels.wash_shuffle; interpret mode "
                          "auto-detects off-TPU hosts)")
-    ap.add_argument("--batch-size", type=int, default=8)
-    ap.add_argument("--seq-len", type=int, default=64)
-    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"])
-    ap.add_argument("--lr", type=float, default=0.05)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--ckpt", default=None, help="save averaged model here (.npz)")
+    ap.add_argument("--batch-size", type=int, default=8,
+                    help="per-member batch size (synthetic LM task)")
+    ap.add_argument("--seq-len", type=int, default=64,
+                    help="training sequence length")
+    ap.add_argument("--optimizer", default="sgd", choices=["sgd", "adamw"],
+                    help="member optimizer")
+    ap.add_argument("--lr", type=float, default=0.05,
+                    help="peak learning rate")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="PRNG seed for init, data, and shuffle plans")
+    ap.add_argument("--ckpt", default=None,
+                    help="save the averaged model (soup) here (.npz)")
     ap.add_argument("--ckpt-population", default=None,
                     help="save the full stacked population here (.npz) — "
                          "the input format of repro.launch.serve --ckpt, "
                          "which needs all members for member/ensemble modes")
-    ap.add_argument("--history", default=None, help="dump history JSON here")
+    ap.add_argument("--history", default=None,
+                    help="dump the training history (loss/consensus/comm "
+                         "per record window) as JSON here")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)

@@ -359,6 +359,65 @@ def gqa_decode(p, cfg: ModelConfig, x, cache_l, pos):
     return out.reshape(B, 1, -1) @ p["wo"], cache_l
 
 
+# -- paged KV cache (continuous-batching serving) ---------------------------
+
+
+def paged_pools_init(cfg: ModelConfig, num_pages: int, page_size: int,
+                     num_layers: int):
+    """Block-pool KV cache: ``num_pages`` shared fixed-size pages per layer.
+
+    Layout ``(num_layers, num_pages, page_size, KV, hd)`` — the per-slot
+    view is a **page table** of pool indices, not a contiguous slice, so
+    slots with different context lengths share one allocation and common
+    prompt prefixes can share pages (``repro.serving.batching`` owns the
+    table/refcount bookkeeping).  Page 0 is reserved by the runtime as a
+    scratch page for inactive slots."""
+    hd = cfg.resolved_head_dim
+    dtype = param_dtype(cfg)
+    shape = (num_layers, num_pages, page_size, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def gqa_decode_paged(p, cfg: ModelConfig, x, k_pool_l, v_pool_l, page_table,
+                     positions, use_pallas: bool):
+    """One-token decode for a batch of slots against the paged pool.
+
+      x          : (B, 1, D) — one new token per slot
+      k/v_pool_l : (P, page_size, KV, hd) — this layer's page pool
+      page_table : (B, max_pages) int32
+      positions  : (B,) int32 — absolute write position of each new token
+                   (its page is ``page_table[b, pos // page_size]``)
+      use_pallas : route the attend through the fused Pallas kernel
+                   (``kernels.paged_attention``) instead of the jnp
+                   gather+attend oracle (``kernels.ref``)
+
+    Every slot's new K/V lands in a page that slot owns exclusively (the
+    runtime never hands a shared prefix page out as a write target), so
+    the scatter below cannot collide across slots.  Returns
+    ``(out (B,1,D), k_pool_l, v_pool_l)``.
+    """
+    from repro.kernels.paged_attention import paged_attention_pallas
+    from repro.kernels.ref import paged_attention_ref
+
+    B, T, _ = x.shape
+    assert T == 1
+    q, k, v = _qkv(p, cfg, x, positions[:, None])
+    page_size = k_pool_l.shape[1]
+    pos = positions.astype(jnp.int32)
+    page_idx = page_table[jnp.arange(B), pos // page_size]  # (B,)
+    offset = pos % page_size
+    k_pool_l = k_pool_l.at[page_idx, offset].set(
+        k[:, 0].astype(k_pool_l.dtype)
+    )
+    v_pool_l = v_pool_l.at[page_idx, offset].set(
+        v[:, 0].astype(v_pool_l.dtype)
+    )
+    lengths = pos + 1  # context = everything written so far incl. this token
+    attend = paged_attention_pallas if use_pallas else paged_attention_ref
+    out = attend(q[:, 0], k_pool_l, v_pool_l, page_table, lengths)
+    return out.reshape(B, 1, -1) @ p["wo"], k_pool_l, v_pool_l
+
+
 # ---------------------------------------------------------------------------
 # cross attention (whisper decoder)
 # ---------------------------------------------------------------------------

@@ -349,6 +349,70 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
     return _logits(params, cfg, x), new_cache
 
 
+def paged_decode_supported(cfg: ModelConfig) -> Optional[str]:
+    """None if ``decode_step_paged`` can serve this config, else the reason.
+
+    The paged path covers the GQA decoder-only families (dense + MoE).
+    MLA needs a latent-space pool, SSM/hybrid state is not paged, sliding
+    windows interact with page retirement, and encoder-decoder / modality
+    prefixes need prefix-page plumbing — all future work, all rejected
+    loudly rather than served wrong."""
+    if cfg.block_kind != "attn":
+        return f"block_kind={cfg.block_kind!r} state is not paged"
+    if cfg.mla:
+        return "MLA latent cache has no paged layout yet"
+    if cfg.is_encdec:
+        return "encoder-decoder cross-attention cache is not paged"
+    if cfg.frontend is not None:
+        return f"frontend={cfg.frontend!r} prefixes are not paged"
+    if cfg.window is not None:
+        return "sliding-window ring eviction is not paged"
+    return None
+
+
+def decode_step_paged(params, cfg: ModelConfig, tokens, positions, pools,
+                      page_tables, use_pallas: bool = False):
+    """One decode token for a batch of serving *slots* over the paged pool.
+
+      tokens      : (B,) int32 — one new token id per slot
+      positions   : (B,) int32 — each token's absolute write position
+                    (per-slot, unlike :func:`decode_step`'s shared scalar —
+                    slots in a continuous batch sit at different depths)
+      pools       : {"k","v"}: (L, P, page_size, KV, hd)
+                    (:func:`repro.models.layers.paged_pools_init`)
+      page_tables : (B, max_pages) int32 pool-page ids per slot
+
+    Everything is traced — admissions, retirements, and page-table edits
+    change VALUES only, so the continuous-batching runtime compiles this
+    exactly once per pool geometry.  Returns ``(logits (B,1,V), pools)``.
+    """
+    reason = paged_decode_supported(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"paged decode: {reason}")
+    pos = jnp.asarray(positions, jnp.int32)
+    x = params["embed"]["tok"][tokens[:, None]]
+    if cfg.pos_kind == "learned":
+        x = x + params["embed"]["pos"][pos][:, None]
+
+    def body(h, xs):
+        block_l, kp_l, vp_l = xs
+        a_in = L.rmsnorm(block_l["ln1"], h, cfg.norm_eps)
+        a, kp_l, vp_l = L.gqa_decode_paged(
+            block_l["attn"], cfg, a_in, kp_l, vp_l, page_tables, pos,
+            use_pallas,
+        )
+        h = h + a
+        y, _ = _mlp_apply(block_l["mlp"], cfg,
+                          L.rmsnorm(block_l["ln2"], h, cfg.norm_eps))
+        return h + y, (kp_l, vp_l)
+
+    x, (k_pool, v_pool) = jax.lax.scan(
+        body, x, (params["blocks"], pools["k"], pools["v"]),
+        unroll=cfg.scan_unroll,
+    )
+    return _logits(params, cfg, x), {"k": k_pool, "v": v_pool}
+
+
 def decode_scan(params, cfg: ModelConfig, first, cache, start_pos, num_steps,
                 next_fn, step_fn=None):
     """Fused multi-token decode: ONE ``lax.scan`` over token positions.

@@ -1,5 +1,6 @@
-"""Serving: fused scan-based batched generation engine (see README.md)."""
+"""Serving: fused scan engine + continuous-batching runtime (see README.md)."""
 
+from repro.serving.batching import ContinuousServer, Request, Result
 from repro.serving.engine import (
     MODES,
     averaged_params,
@@ -17,7 +18,10 @@ from repro.serving.engine import (
 )
 
 __all__ = [
+    "ContinuousServer",
     "MODES",
+    "Request",
+    "Result",
     "averaged_params",
     "clear_executable_cache",
     "decode_trace_count",

@@ -1,0 +1,641 @@
+"""Continuous-batching serving runtime over a paged KV cache.
+
+The scan engine (``serving.engine``) compiles one decode program per
+``(B, S, max_new)`` shape — ideal when requests arrive in shape-uniform
+batches, hopeless for mixed-length traffic, which either pads every
+request to the worst case or re-compiles per shape.  This runtime serves a
+*stream* of heterogeneous requests with exactly ONE compiled decode step:
+
+  * **Paged KV cache** — instead of a per-request contiguous
+    ``(B, capacity)`` cache, KV lives in a shared pool of fixed-size pages
+    (``models.layers.paged_pools_init``); each serving *slot* holds a page
+    table of pool indices.  A slot's context can grow page-by-page, and
+    slots of wildly different lengths share one allocation.
+  * **Continuous scheduling** — a host-side scheduler admits queued
+    requests into a fixed array of ``max_slots`` slots, runs one compiled
+    decode step for the whole in-flight set per token, and retires
+    finished slots via an in-program **done-mask**.  Admissions,
+    retirements, and page-table edits change traced VALUES only (token
+    ids, positions, table entries), never shapes — so the decode program
+    traces exactly once per pool geometry, guarded by
+    :func:`decode_trace_count` (same contract as ``serving.engine``).
+  * **Prefix page reuse** — full prompt pages are keyed by a chained
+    content hash; a request whose prompt shares a page-aligned prefix with
+    an in-flight request reuses those pages (refcount bump) instead of
+    allocating + rewriting them.  Pages are freed when their refcount
+    drops to zero at retirement.
+  * **Paged attention** — the decode attend either gathers pages in jnp
+    (``kernels.ref.paged_attention_ref``, the CPU default) or runs the
+    fused Pallas kernel (``kernels.paged_attention``, the TPU default;
+    ``use_pallas=None`` auto-detects like ``wash_shuffle``).
+
+Per-request **parity contract** (``tests/test_batching.py``): a request
+served through a busy continuous batch yields token-for-token the same
+output as serving it alone through ``engine.generate_reference`` with the
+same key — scheduling is a throughput optimization, not a semantics
+change.
+
+Prefill still compiles once per distinct prompt length (shape-dependent,
+like the scan engine); decode — the steady-state hot path where a request
+spends ``max_new - 1`` of its steps — never re-traces.
+
+Serving modes mirror the engine: ``soup`` / ``member`` construct the
+server with single-model params; ``ensemble`` holds the stacked
+population, decodes every member per step against per-member pools, and
+averages logits (``averaging.balanced_mean``) before sampling.
+
+Example::
+
+    server = ContinuousServer(params, cfg, page_size=16, max_slots=8)
+    out = server.run([Request(0, prompt_a, max_new=32),
+                      Request(1, prompt_b, max_new=7)])
+    # out[0].tokens, out[1].tokens — each identical to serving alone
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.compat import donate_argnums
+from repro.core import averaging
+from repro.models import layers as L
+from repro.models import transformer as M
+from repro.serving.engine import MODES, serving_params
+
+PyTree = Any
+
+#: pool page 0 is never allocated: inactive slots' page tables point here,
+#: so their (masked, garbage) writes can't corrupt live pages.
+SCRATCH_PAGE = 0
+
+
+# ---------------------------------------------------------------------------
+# trace counters + executable cache (same contract as serving.engine)
+# ---------------------------------------------------------------------------
+
+_DECODE_TRACES = [0]
+_PREFILL_TRACES = [0]
+_EXEC_CACHE: Dict[Tuple, Callable] = {}
+
+
+def reset_trace_counts() -> None:
+    _DECODE_TRACES[0] = 0
+    _PREFILL_TRACES[0] = 0
+
+
+def decode_trace_count() -> int:
+    """Traces of the continuous decode-step program (1 per pool geometry)."""
+    return _DECODE_TRACES[0]
+
+
+def prefill_trace_count() -> int:
+    """Traces of the admit (prefill+commit) program (1 per prompt length)."""
+    return _PREFILL_TRACES[0]
+
+
+def executable_cache_size() -> int:
+    return len(_EXEC_CACHE)
+
+
+def clear_executable_cache() -> None:
+    _EXEC_CACHE.clear()
+
+
+# ---------------------------------------------------------------------------
+# requests / results / slots
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request in the stream.
+
+    ``key`` is required when the server samples (temperature > 0) — the
+    same discipline as ``engine.generate`` — and must be per-request, so
+    identical prompts in one stream draw independent tokens."""
+
+    uid: Any
+    tokens: np.ndarray  # (S,) int32 prompt
+    max_new: int
+    key: Optional[jax.Array] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Result:
+    uid: Any
+    tokens: np.ndarray  # (S + max_new,) int32: prompt + generated
+
+
+@dataclasses.dataclass
+class _Slot:
+    uid: Any
+    prompt: np.ndarray
+    max_new: int
+    key: jax.Array           # per-request sample key (split(req.key, 1)[0])
+    pages: List[int]         # pool pages, prompt-order (shared and owned)
+    total_pages: int         # worst-case pages this request can ever hold
+    out: List[int]           # sampled tokens so far (out[-1] is pending)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def write_pos(self) -> int:
+        # the pending token out[-1] has not been written yet; it lands at
+        # absolute position prompt_len + (len(out) - 1) this step
+        return self.prompt_len + len(self.out) - 1
+
+    @property
+    def future_pages(self) -> int:
+        return self.total_pages - len(self.pages)
+
+
+def _total_pages(prompt_len: int, max_new: int, page_size: int) -> int:
+    # tokens ever written to the pool: S prompt + (max_new - 1) decode
+    # inputs (the final sampled token is never fed back)
+    stored = prompt_len + max_new - 1
+    return max(-(-stored // page_size), 1)
+
+
+# ---------------------------------------------------------------------------
+# host-side page pool: free list, refcounts, prefix hash index
+# ---------------------------------------------------------------------------
+
+
+class _PagePool:
+    """Host bookkeeping for the device page pool.
+
+    Pages are refcounted: a page backing a shared prompt prefix is held by
+    every slot that deduped onto it and freed when the last holder
+    retires.  ``prefix`` maps the chained content hash of a page-aligned
+    prompt chunk to the live page holding it."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self.free: deque = deque(range(1, num_pages))  # page 0 = scratch
+        self.refcount: Dict[int, int] = {}
+        self.prefix: Dict[bytes, int] = {}
+        self.hash_of: Dict[int, bytes] = {}
+
+    @property
+    def free_count(self) -> int:
+        return len(self.free)
+
+    @property
+    def used_count(self) -> int:
+        return (self.num_pages - 1) - len(self.free)
+
+    def alloc(self) -> int:
+        page = self.free.popleft()
+        self.refcount[page] = 1
+        return page
+
+    def share(self, digest: bytes) -> Optional[int]:
+        page = self.prefix.get(digest)
+        if page is not None:
+            self.refcount[page] += 1
+        return page
+
+    def register(self, page: int, digest: bytes) -> None:
+        self.prefix[digest] = page
+        self.hash_of[page] = digest
+
+    def release(self, page: int) -> None:
+        self.refcount[page] -= 1
+        if self.refcount[page] == 0:
+            del self.refcount[page]
+            digest = self.hash_of.pop(page, None)
+            if digest is not None:
+                self.prefix.pop(digest, None)
+            self.free.append(page)
+
+
+def _chain_hashes(tokens: np.ndarray, page_size: int) -> List[bytes]:
+    """Chained per-page digests of the prompt's full pages: page j's key
+    covers tokens[0 : (j+1)*page_size], so equal keys mean equal *prefixes*
+    (not just equal chunks) — the prefix property page sharing needs."""
+    digests = []
+    h = b""
+    for j in range(tokens.shape[0] // page_size):
+        chunk = np.ascontiguousarray(
+            tokens[j * page_size:(j + 1) * page_size], dtype=np.int32
+        )
+        h = hashlib.sha1(h + chunk.tobytes()).digest()
+        digests.append(h)
+    return digests
+
+
+# ---------------------------------------------------------------------------
+# sampling (step index per SLOT, unlike the engine's shared scalar)
+# ---------------------------------------------------------------------------
+
+
+def _sample_steps(last, keys, steps, temperature, greedy: bool):
+    """Next-token ids (B,) from last-position logits (B, V).
+
+    Same fold-in scheme as ``engine._sample`` but with a per-slot step
+    vector — slots in a continuous batch sit at different depths of their
+    streams, yet each stream must equal the request served alone."""
+    if greedy:
+        return jnp.argmax(last, axis=-1).astype(jnp.int32)
+    ks = jax.vmap(jax.random.fold_in)(keys, steps)
+    return jax.vmap(
+        lambda lg, k: jax.random.categorical(k, lg)
+    )(last.astype(jnp.float32) / temperature, ks).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# compiled programs
+# ---------------------------------------------------------------------------
+
+
+def _build_admit(cfg: ModelConfig, ensemble: bool, S: int, n_pages: int,
+                 page_size: int, greedy: bool):
+    """Prefill + page-commit + first-token sample, one jit per prompt length.
+
+    ``write_mask`` skips pages the scheduler deduped onto a shared prefix
+    (their content is already in the pool — same tokens, same params, same
+    prefill program ⇒ same KV)."""
+
+    def program(params, k_pool, v_pool, tokens, page_ids, write_mask, key,
+                temperature):
+        _PREFILL_TRACES[0] += 1
+        batch = {"tokens": tokens}
+        if ensemble:
+            logits, cache = jax.vmap(
+                lambda p: M.prefill(p, cfg, batch, capacity=S)
+            )(params)
+            k_new = cache["kv"]["k"][:, :, 0]   # (N, L, S, KV, hd)
+            v_new = cache["kv"]["v"][:, :, 0]
+            last = averaging.balanced_mean(logits)[:, -1]
+        else:
+            logits, cache = M.prefill(params, cfg, batch, capacity=S)
+            k_new = cache["kv"]["k"][:, 0]      # (L, S, KV, hd)
+            v_new = cache["kv"]["v"][:, 0]
+            last = logits[:, -1]
+
+        pad = n_pages * page_size - S
+        def paged(a):
+            a = jnp.pad(a, [(0, 0)] * (a.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+            return a.reshape(a.shape[:-3] + (n_pages, page_size) + a.shape[-2:])
+
+        k_new, v_new = paged(k_new), paged(v_new)
+        sel = write_mask[:, None, None, None]
+        if ensemble:
+            cur_k = k_pool[:, :, page_ids]
+            cur_v = v_pool[:, :, page_ids]
+            k_pool = k_pool.at[:, :, page_ids].set(jnp.where(sel, k_new, cur_k))
+            v_pool = v_pool.at[:, :, page_ids].set(jnp.where(sel, v_new, cur_v))
+        else:
+            cur_k = k_pool[:, page_ids]
+            cur_v = v_pool[:, page_ids]
+            k_pool = k_pool.at[:, page_ids].set(jnp.where(sel, k_new, cur_k))
+            v_pool = v_pool.at[:, page_ids].set(jnp.where(sel, v_new, cur_v))
+
+        token0 = _sample_steps(last, key[None], jnp.zeros((1,), jnp.int32),
+                               temperature, greedy)[0]
+        return k_pool, v_pool, token0
+
+    return jax.jit(program, donate_argnums=donate_argnums((1, 2)))
+
+
+def _build_decode(cfg: ModelConfig, ensemble: bool, greedy: bool,
+                  use_pallas: bool):
+    """THE continuous decode step: one token for the whole in-flight set.
+
+    Every operand is traced — token ids, write positions, per-slot sample
+    steps, budgets, the active mask, page tables, keys, temperature — so
+    the program compiles once per pool geometry and is reused across every
+    admission/retirement the stream ever makes."""
+
+    def program(params, k_pool, v_pool, tokens, positions, steps, budgets,
+                active, page_tables, keys, temperature):
+        _DECODE_TRACES[0] += 1
+        if ensemble:
+            def member(p, kp, vp):
+                lg, pools = M.decode_step_paged(
+                    p, cfg, tokens, positions, {"k": kp, "v": vp},
+                    page_tables, use_pallas,
+                )
+                return lg, pools["k"], pools["v"]
+
+            lgs, k_pool, v_pool = jax.vmap(member)(params, k_pool, v_pool)
+            logits = averaging.balanced_mean(lgs)
+        else:
+            logits, pools = M.decode_step_paged(
+                params, cfg, tokens, positions, {"k": k_pool, "v": v_pool},
+                page_tables, use_pallas,
+            )
+            k_pool, v_pool = pools["k"], pools["v"]
+
+        sampled = _sample_steps(logits[:, -1], keys, steps, temperature,
+                                greedy)
+        sampled = jnp.where(active, sampled, 0)
+        done = active & (steps + 1 >= budgets)
+        return sampled, done, k_pool, v_pool
+
+    return program
+
+
+def _programs(cfg: ModelConfig, ensemble: bool, geometry: Tuple,
+              greedy: bool, use_pallas: bool):
+    """(admit-by-S factory, decode) pair from the module executable cache."""
+    key = ("continuous", cfg, ensemble, geometry, greedy, use_pallas)
+    if key not in _EXEC_CACHE:
+        _EXEC_CACHE[key] = jax.jit(
+            _build_decode(cfg, ensemble, greedy, use_pallas),
+            donate_argnums=donate_argnums((1, 2)),
+        )
+    return _EXEC_CACHE[key]
+
+
+def _admit_program(cfg: ModelConfig, ensemble: bool, S: int, n_pages: int,
+                   page_size: int, num_pages: int, greedy: bool):
+    key = ("cont_admit", cfg, ensemble, S, n_pages, page_size, num_pages,
+           greedy)
+    if key not in _EXEC_CACHE:
+        _EXEC_CACHE[key] = _build_admit(cfg, ensemble, S, n_pages, page_size,
+                                        greedy)
+    return _EXEC_CACHE[key]
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+
+
+class ContinuousServer:
+    """Continuous-batching server: queue in, per-request token streams out.
+
+    Parameters
+    ----------
+    params : single-model params (modes ``soup``/``member``) or the stacked
+        ``(N, ...)`` population (mode ``ensemble``) — exactly the routing
+        of ``engine.generate``; use :meth:`from_trained` to go straight
+        from a training result.
+    page_size : tokens per KV page.
+    max_slots : in-flight request capacity (the decode step's batch).
+    num_pages : pool size, shared by all slots (page 0 is scratch).
+    max_pages_per_slot : page-table width = the longest context one slot
+        can hold; defaults to the whole pool.
+    temperature / use_pallas : stream-wide sampling temperature and
+        attend-kernel routing (None = Pallas on TPU, jnp oracle elsewhere).
+    """
+
+    def __init__(self, params: PyTree, cfg: ModelConfig, *,
+                 mode: str = "soup", temperature: float = 0.0,
+                 page_size: int = 16, max_slots: int = 4,
+                 num_pages: int = 64,
+                 max_pages_per_slot: Optional[int] = None,
+                 use_pallas: Optional[bool] = None):
+        if mode not in MODES:
+            raise ValueError(
+                f"unknown serving mode {mode!r}; expected one of {MODES}")
+        reason = M.paged_decode_supported(cfg)
+        if reason is not None:
+            raise NotImplementedError(f"continuous batching: {reason}")
+        if page_size < 1 or max_slots < 1 or num_pages < 2:
+            raise ValueError("need page_size >= 1, max_slots >= 1, "
+                             "num_pages >= 2 (page 0 is scratch)")
+        self.cfg = cfg
+        self.params = params
+        self.ensemble = mode == "ensemble"
+        self.temperature = float(temperature)
+        self.greedy = self.temperature <= 0.0
+        self.page_size = page_size
+        self.max_slots = max_slots
+        self.num_pages = num_pages
+        self.max_pages = (max_pages_per_slot if max_pages_per_slot is not None
+                          else num_pages - 1)
+        if use_pallas is None:
+            use_pallas = jax.default_backend() == "tpu"
+        self.use_pallas = bool(use_pallas)
+
+        n_members = None
+        if self.ensemble:
+            n_members = jax.tree_util.tree_leaves(params)[0].shape[0]
+        pools = L.paged_pools_init(cfg, num_pages, page_size, cfg.num_layers)
+        if self.ensemble:
+            pools = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (n_members,) + x.shape), pools)
+        self._k_pool, self._v_pool = pools["k"], pools["v"]
+
+        self._pool = _PagePool(num_pages)
+        self._slots: List[Optional[_Slot]] = [None] * max_slots
+        self._queue: deque = deque()
+        self._results: Dict[Any, Result] = {}
+        self._dummy_key = jax.random.split(jax.random.key(0), 1)[0]
+        geometry = (max_slots, self.max_pages, page_size, num_pages)
+        self._decode = _programs(cfg, self.ensemble, geometry, self.greedy,
+                                 self.use_pallas)
+        self.stats = {"admitted": 0, "retired": 0, "decode_steps": 0,
+                      "pages_allocated": 0, "pages_shared": 0,
+                      "peak_pages_in_use": 0}
+
+    # -- construction from a trained population -------------------------
+
+    @classmethod
+    def from_trained(cls, trained: Any, cfg: ModelConfig, *,
+                     mode: str = "soup", member: int = 0, **kwargs):
+        """Route a training result through ``engine.serving_params`` into a
+        server: soup/member servers hold one model, ensemble the stack."""
+        return cls(serving_params(trained, mode, member), cfg, mode=mode,
+                   **kwargs)
+
+    # -- queue API -------------------------------------------------------
+
+    def submit(self, request: Request) -> None:
+        tokens = np.asarray(request.tokens, np.int32).reshape(-1)
+        if tokens.shape[0] < 1 or request.max_new < 1:
+            raise ValueError("need a non-empty prompt and max_new >= 1")
+        if not self.greedy and request.key is None:
+            raise ValueError(
+                "sampling (temperature>0) requires a per-request PRNG key, "
+                "same discipline as engine.generate")
+        # results are keyed by uid: two pending requests with one uid would
+        # silently drop one stream's tokens.  (Reusing a uid AFTER its
+        # request completed is fine — long-lived servers recycle ids, and
+        # the overwrite is then a new result, not a lost one.)
+        in_flight = {s.uid for s in self._slots if s is not None}
+        if request.uid in in_flight or any(
+                r.uid == request.uid for r in self._queue):
+            raise ValueError(
+                f"duplicate request uid {request.uid!r}: a request with "
+                f"this uid is already queued or in flight")
+        total = _total_pages(tokens.shape[0], request.max_new, self.page_size)
+        if total > self.max_pages:
+            raise ValueError(
+                f"request {request.uid!r} needs {total} pages "
+                f"(> max_pages_per_slot={self.max_pages})")
+        if total > self.num_pages - 1:
+            raise ValueError(
+                f"request {request.uid!r} needs {total} pages "
+                f"(> pool of {self.num_pages - 1} allocatable pages)")
+        self._queue.append(
+            dataclasses.replace(request, tokens=tokens))
+
+    @property
+    def queue_len(self) -> int:
+        return len(self._queue)
+
+    @property
+    def active_slots(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    # -- scheduling ------------------------------------------------------
+
+    def _reserved_pages(self) -> int:
+        """Pages the in-flight slots may still demand (lazy growth never
+        fails because admission reserved for everyone's worst case)."""
+        return sum(s.future_pages for s in self._slots if s is not None)
+
+    def _try_admit(self, req: Request) -> bool:
+        S = int(req.tokens.shape[0])
+        n_prompt = max(-(-S // self.page_size), 1)
+        total = _total_pages(S, req.max_new, self.page_size)
+
+        digests = _chain_hashes(req.tokens, self.page_size)
+        shared = [self._pool.prefix.get(d) is not None for d in digests]
+        new_now = n_prompt - sum(shared)
+        need = new_now + (total - n_prompt)
+        if self._pool.free_count - self._reserved_pages() < need:
+            return False
+
+        pages: List[int] = []
+        write_mask = np.ones((n_prompt,), bool)
+        for j in range(n_prompt):
+            page = self._pool.share(digests[j]) if j < len(digests) else None
+            if page is not None:
+                write_mask[j] = False
+                self.stats["pages_shared"] += 1
+            else:
+                page = self._pool.alloc()
+                self.stats["pages_allocated"] += 1
+                if j < len(digests):  # full page: future requests may share
+                    self._pool.register(page, digests[j])
+            pages.append(page)
+        self.stats["peak_pages_in_use"] = max(
+            self.stats["peak_pages_in_use"], self._pool.used_count)
+
+        key = req.key if req.key is not None else jax.random.key(0)
+        slot_key = jax.random.split(key, 1)[0]
+        admit = _admit_program(self.cfg, self.ensemble, S, n_prompt,
+                               self.page_size, self.num_pages, self.greedy)
+        self._k_pool, self._v_pool, token0 = admit(
+            self.params, self._k_pool, self._v_pool,
+            jnp.asarray(req.tokens)[None], jnp.asarray(pages, jnp.int32),
+            jnp.asarray(write_mask), slot_key,
+            jnp.float32(max(self.temperature, 1e-6)),
+        )
+        slot = _Slot(uid=req.uid, prompt=req.tokens, max_new=req.max_new,
+                     key=slot_key, pages=pages, total_pages=total,
+                     out=[int(token0)])
+        self.stats["admitted"] += 1
+        if req.max_new == 1:  # prefill-only request: retire immediately
+            self._retire(slot)
+            return True
+        self._slots[self._slots.index(None)] = slot
+        return True
+
+    def _admit(self) -> None:
+        while self._queue and None in self._slots:
+            if not self._try_admit(self._queue[0]):
+                break  # head-of-line blocks until pages free up
+            self._queue.popleft()
+
+    def _grow(self, slot: _Slot) -> None:
+        """Lazy page growth: allocate the write page just before it is
+        needed.  Cannot fail — admission reserved the worst case."""
+        need_pages = slot.write_pos // self.page_size + 1
+        while len(slot.pages) < need_pages:
+            slot.pages.append(self._pool.alloc())
+            self.stats["pages_allocated"] += 1
+        self.stats["peak_pages_in_use"] = max(
+            self.stats["peak_pages_in_use"], self._pool.used_count)
+
+    def _retire(self, slot: _Slot) -> None:
+        for page in slot.pages:
+            self._pool.release(page)
+        self.stats["retired"] += 1
+        self._results[slot.uid] = Result(
+            uid=slot.uid,
+            tokens=np.concatenate([slot.prompt,
+                                   np.asarray(slot.out, np.int32)]),
+        )
+
+    # -- the decode step -------------------------------------------------
+
+    def step(self) -> List[Any]:
+        """Admit what fits, dispatch ONE decode step for the in-flight set,
+        retire whatever the done-mask finished.  Returns retired uids."""
+        before = set(self._results)
+        self._admit()
+        if self.active_slots == 0:
+            return [u for u in self._results if u not in before]
+
+        B, Pmax = self.max_slots, self.max_pages
+        tokens = np.zeros((B,), np.int32)
+        positions = np.zeros((B,), np.int32)
+        steps = np.zeros((B,), np.int32)
+        budgets = np.full((B,), np.iinfo(np.int32).max, np.int32)
+        active = np.zeros((B,), bool)
+        tables = np.full((B, Pmax), SCRATCH_PAGE, np.int32)
+        keys = []
+        for i, slot in enumerate(self._slots):
+            if slot is None:
+                keys.append(self._dummy_key)
+                continue
+            self._grow(slot)
+            tokens[i] = slot.out[-1]
+            positions[i] = slot.write_pos
+            steps[i] = len(slot.out)
+            budgets[i] = slot.max_new
+            active[i] = True
+            tables[i, :len(slot.pages)] = slot.pages
+            keys.append(slot.key)
+
+        sampled, done, self._k_pool, self._v_pool = self._decode(
+            self.params, self._k_pool, self._v_pool,
+            jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(steps),
+            jnp.asarray(budgets), jnp.asarray(active), jnp.asarray(tables),
+            jnp.stack(keys), jnp.float32(max(self.temperature, 1e-6)),
+        )
+        sampled = np.asarray(sampled)
+        done = np.asarray(done)
+        self.stats["decode_steps"] += 1
+
+        for i, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            slot.out.append(int(sampled[i]))
+            if done[i]:
+                self._retire(slot)
+                self._slots[i] = None
+        return [u for u in self._results if u not in before]
+
+    def run(self, requests: Optional[List[Request]] = None
+            ) -> Dict[Any, Result]:
+        """Submit ``requests`` (if given) and drain queue + slots to
+        completion.  Returns every result produced so far, keyed by uid."""
+        for req in requests or []:
+            self.submit(req)
+        while self._queue or self.active_slots:
+            n_results = len(self._results)
+            self.step()
+            if (self.active_slots == 0 and self._queue
+                    and len(self._results) == n_results):
+                # submit() validates every request fits an empty pool, so
+                # an idle server that cannot admit is a bookkeeping bug
+                raise RuntimeError(
+                    f"scheduler stalled with {len(self._queue)} queued "
+                    f"requests and {self._pool.free_count} free pages")
+        return dict(self._results)

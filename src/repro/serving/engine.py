@@ -53,6 +53,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import averaging
+from repro.core.compat import donate_argnums
 from repro.core import population as pop
 from repro.models import transformer as M
 
@@ -108,9 +109,8 @@ def clear_executable_cache() -> None:
     _EXEC_CACHE.clear()
 
 
-def _donate(argnums):
-    """Donation argnums, or () on CPU where donation is an ignored no-op."""
-    return argnums if jax.default_backend() in ("tpu", "gpu") else ()
+# donation argnums, or () on CPU where donation is an ignored no-op
+_donate = donate_argnums
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,281 @@
+"""Continuous-batching runtime (repro/serving/batching.py).
+
+Contracts under test:
+  * a request served through a busy continuous batch is token-for-token
+    identical to serving it alone via ``engine.generate_reference`` with
+    the same key (greedy AND temperature) — staggered admissions and
+    retirements change scheduling, never semantics;
+  * the decode-step program compiles exactly ONCE for a whole mixed-length
+    stream, across every admission/retirement (trace counter — same
+    contract as the scan engine's per-shape guarantee, strengthened to one
+    compile TOTAL); a second stream on the same server adds zero traces;
+  * full prompt pages shared between in-flight requests are deduped via
+    the chained prefix hash, refcounted, and freed when the last holder
+    retires (pool returns to empty);
+  * ensemble mode averages member logits before sampling (oracle: the
+    scan engine's ensemble mode, itself parity-tested against the
+    explicit vmap loop);
+  * the Pallas paged-attention path (interpret on CPU) produces the same
+    tokens as the jnp gather oracle path;
+  * unsupported cache layouts (MLA, SSM state, sliding window, modality
+    prefixes) are rejected loudly, and sampling without a per-request key
+    is rejected like in ``engine.generate``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as M
+from repro.serving import batching
+from repro.serving import engine as serving
+
+KEY = jax.random.key(0)
+
+CFG = ModelConfig(num_layers=2, d_model=32, num_heads=4, num_kv_heads=2,
+                  d_ff=64, vocab_size=50, dtype="float32")
+
+# (prompt_len, max_new) pairs with staggered finishes: slots retire and
+# re-admit mid-stream (max_slots below is smaller than the request count)
+MIXED = [(5, 6), (9, 3), (3, 8), (12, 1), (7, 5), (4, 4)]
+
+
+def _params():
+    return M.init_params(KEY, CFG)
+
+
+def _mixed_requests(temperature=0.0, seed=0):
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i, (S, mn) in enumerate(MIXED):
+        prompt = rng.integers(0, CFG.vocab_size, size=(S,)).astype(np.int32)
+        key = jax.random.key(100 + i) if temperature > 0 else None
+        reqs.append(batching.Request(i, prompt, mn, key=key))
+    return reqs
+
+
+def _reference(params, req, temperature=0.0):
+    return np.asarray(serving.generate_reference(
+        params, CFG, {"tokens": jnp.asarray(req.tokens)[None]}, req.max_new,
+        temperature=temperature, key=req.key,
+    ))[0]
+
+
+@pytest.fixture(autouse=True)
+def _fresh_runtime():
+    batching.reset_trace_counts()
+    batching.clear_executable_cache()
+    yield
+    batching.clear_executable_cache()
+
+
+# ---------------------------------------------------------------------------
+# mixed-length stream parity + one-compile contract
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8], ids=["greedy", "temp"])
+def test_mixed_stream_matches_per_request_reference(temperature):
+    """Staggered admissions/retirements (3 slots, 6 requests, budgets from
+    1 to 8 tokens) reproduce every request's solo output bitwise, with one
+    decode compile for the whole stream."""
+    params = _params()
+    reqs = _mixed_requests(temperature)
+    server = batching.ContinuousServer(
+        params, CFG, temperature=temperature, page_size=4, max_slots=3,
+        num_pages=32)
+    out = server.run(reqs)
+    assert set(out) == {r.uid for r in reqs}
+    for r in reqs:
+        np.testing.assert_array_equal(
+            _reference(params, r, temperature), out[r.uid].tokens,
+            err_msg=f"request {r.uid} (S={len(r.tokens)}, "
+                    f"max_new={r.max_new}) diverged from solo serving")
+    assert batching.decode_trace_count() == 1, (
+        f"decode must compile once for the whole stream, "
+        f"traced {batching.decode_trace_count()}x")
+    # prefill compiles per distinct prompt length (shape-dependent)
+    assert batching.prefill_trace_count() == len({s for s, _ in MIXED})
+    assert server.stats["retired"] == len(reqs)
+
+
+def test_second_stream_reuses_the_decode_executable():
+    params = _params()
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=3, num_pages=32)
+    server.run(_mixed_requests(seed=1))
+    assert batching.decode_trace_count() == 1
+    out = server.run(_mixed_requests(seed=2))
+    assert batching.decode_trace_count() == 1, "re-traced on second stream"
+    # second stream's requests are all present and still reference-exact
+    for r in _mixed_requests(seed=2):
+        np.testing.assert_array_equal(
+            _reference(params, r), out[r.uid].tokens)
+
+
+def test_single_step_admission_and_inflight_mix():
+    """step() admits what fits and decodes everyone in flight; queue
+    drains as slots retire (the continuous part of continuous batching)."""
+    params = _params()
+    reqs = _mixed_requests()
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=32)
+    for r in reqs:
+        server.submit(r)
+    assert server.queue_len == len(reqs)
+    seen_active = 0
+    finished = []
+    for _ in range(100):
+        finished += server.step()
+        seen_active = max(seen_active, server.active_slots)
+        if not server.queue_len and not server.active_slots:
+            break
+    assert sorted(finished) == [r.uid for r in reqs]
+    assert seen_active == 2  # both slots actually ran concurrently
+
+
+# ---------------------------------------------------------------------------
+# paged pool: prefix dedup + refcounted frees
+# ---------------------------------------------------------------------------
+
+
+def test_prefix_pages_are_shared_and_refcount_freed():
+    params = _params()
+    rng = np.random.default_rng(3)
+    shared = rng.integers(0, CFG.vocab_size, size=(8,)).astype(np.int32)
+    a = np.concatenate([shared, rng.integers(0, 50, size=(3,)).astype(np.int32)])
+    b = np.concatenate([shared, rng.integers(0, 50, size=(5,)).astype(np.int32)])
+    c = rng.integers(0, CFG.vocab_size, size=(11,)).astype(np.int32)
+    reqs = [batching.Request("a", a, 5), batching.Request("b", b, 4),
+            batching.Request("c", c, 3)]
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=3, num_pages=32)
+    out = server.run(reqs)
+    # the 8-token shared prefix is 2 full pages at page_size=4: request b
+    # (admitted while a is in flight) reuses both
+    assert server.stats["pages_shared"] == 2, server.stats
+    # refcounted frees: the drained pool is completely empty again
+    assert server._pool.used_count == 0
+    assert not server._pool.refcount and not server._pool.prefix
+    # sharing pages never changes tokens
+    for r in reqs:
+        np.testing.assert_array_equal(_reference(params, r), out[r.uid].tokens)
+
+
+def test_page_pressure_queues_without_deadlock():
+    """A pool too small for all requests at once still serves the stream
+    (admission reserves worst-case pages; head-of-line waits for frees)."""
+    params = _params()
+    rng = np.random.default_rng(4)
+    reqs = [batching.Request(i, rng.integers(0, 50, (9,)).astype(np.int32), 6)
+            for i in range(4)]
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=4, num_pages=8)
+    out = server.run(reqs)
+    assert len(out) == 4
+    for r in reqs:
+        np.testing.assert_array_equal(_reference(params, r), out[r.uid].tokens)
+    assert server.stats["peak_pages_in_use"] <= 7
+
+
+def test_oversized_request_rejected_at_submit():
+    params = _params()
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=8)
+    big = np.zeros((40,), np.int32)
+    with pytest.raises(ValueError, match="pages"):
+        server.submit(batching.Request("big", big, 8))
+
+
+# ---------------------------------------------------------------------------
+# modes + kernel routing
+# ---------------------------------------------------------------------------
+
+
+def test_ensemble_mode_matches_scan_engine():
+    popn = jax.vmap(lambda k: M.init_params(k, CFG))(jax.random.split(KEY, 3))
+    reqs = _mixed_requests(seed=5)[:4]
+    server = batching.ContinuousServer.from_trained(
+        popn, CFG, mode="ensemble", page_size=4, max_slots=2, num_pages=32)
+    out = server.run(reqs)
+    for r in reqs:
+        expect = np.asarray(serving.generate(
+            popn, CFG, {"tokens": jnp.asarray(r.tokens)[None]}, r.max_new,
+            mode="ensemble"))[0]
+        np.testing.assert_array_equal(expect, out[r.uid].tokens)
+    assert batching.decode_trace_count() == 1
+
+
+def test_member_mode_routes_params():
+    from repro.core import population as pop
+
+    popn = jax.vmap(lambda k: M.init_params(k, CFG))(jax.random.split(KEY, 3))
+    req = _mixed_requests(seed=6)[0]
+    server = batching.ContinuousServer.from_trained(
+        popn, CFG, mode="member", member=1, page_size=4, max_slots=2,
+        num_pages=32)
+    out = server.run([req])
+    direct = _reference(pop.member(popn, 1), req)
+    np.testing.assert_array_equal(direct, out[req.uid].tokens)
+
+
+def test_pallas_kernel_path_matches_reference_tokens():
+    """use_pallas=True routes the attend through the fused kernel
+    (interpret mode here) — same tokens as the jnp oracle path."""
+    params = _params()
+    reqs = _mixed_requests(seed=7)[:3]
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=32,
+                                       use_pallas=True)
+    out = server.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(_reference(params, r), out[r.uid].tokens)
+
+
+# ---------------------------------------------------------------------------
+# guard rails
+# ---------------------------------------------------------------------------
+
+
+def test_unsupported_cache_layouts_rejected():
+    mla = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=50, mla=True, kv_lora_rank=16,
+                      qk_nope_dim=8, qk_rope_dim=8, v_head_dim=8,
+                      dtype="float32")
+    with pytest.raises(NotImplementedError, match="MLA"):
+        batching.ContinuousServer(M.init_params(KEY, mla), mla)
+    swa = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=50, window=8, dtype="float32")
+    with pytest.raises(NotImplementedError, match="window"):
+        batching.ContinuousServer(M.init_params(KEY, swa), swa)
+    vlm = ModelConfig(num_layers=1, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=50, frontend="vision",
+                      num_patches=3, dtype="float32")
+    with pytest.raises(NotImplementedError, match="frontend"):
+        batching.ContinuousServer(M.init_params(KEY, vlm), vlm)
+
+
+def test_duplicate_pending_uid_rejected_but_reuse_after_completion_ok():
+    """Two pending requests with one uid would silently drop a stream
+    (results are keyed by uid); reuse after completion is legitimate."""
+    params = _params()
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=32)
+    req = _mixed_requests(seed=8)[0]
+    server.submit(req)
+    with pytest.raises(ValueError, match="duplicate request uid"):
+        server.submit(req)
+    server.run()
+    # completed: same uid admits again and produces the same tokens
+    out = server.run([req])
+    np.testing.assert_array_equal(_reference(params, req), out[req.uid].tokens)
+
+
+def test_sampling_requires_per_request_key():
+    server = batching.ContinuousServer(_params(), CFG, temperature=0.7,
+                                       page_size=4, max_slots=2,
+                                       num_pages=16)
+    with pytest.raises(ValueError, match="per-request PRNG key"):
+        server.submit(batching.Request(0, np.zeros((4,), np.int32), 2))

@@ -189,6 +189,58 @@ def test_flash_attention_noncausal():
 
 
 # ---------------------------------------------------------------------------
+# paged_attention (continuous-batching decode over a block-pool KV cache)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("B,H,KV,hd,P,ps,mp", [
+    (3, 4, 2, 16, 8, 4, 3),    # GQA groups of 2, lengths across pages
+    (2, 8, 8, 32, 16, 8, 4),   # MHA (g=1)
+    (1, 2, 1, 8, 4, 2, 2),     # single slot, single kv head
+    (4, 4, 2, 64, 32, 16, 2),  # wider pages
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_paged_attention_kernel(B, H, KV, hd, P, ps, mp, dtype):
+    ks = [jax.random.fold_in(KEY, i) for i in range(5)]
+    q = jax.random.normal(ks[0], (B, H, hd)).astype(dtype)
+    kp = jax.random.normal(ks[1], (P, ps, KV, hd)).astype(dtype)
+    vp = jax.random.normal(ks[2], (P, ps, KV, hd)).astype(dtype)
+    pt = jax.random.randint(ks[3], (B, mp), 0, P)
+    lengths = jax.random.randint(ks[4], (B,), 1, mp * ps + 1)
+    out = ops.paged_attention(q, kp, vp, pt, lengths)
+    expect = ref.paged_attention_ref(q, kp, vp, pt, lengths)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32),
+        **_tol(dtype),
+    )
+
+
+def test_paged_attention_length_edges():
+    """length=1 (only the fresh token), page-boundary lengths, and full
+    tables all mask correctly; pages past the length don't leak."""
+    B, H, KV, hd, P, ps, mp = 3, 2, 2, 8, 6, 4, 3
+    ks = [jax.random.fold_in(KEY, i) for i in range(3)]
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp = jax.random.normal(ks[1], (P, ps, KV, hd))
+    vp = jax.random.normal(ks[2], (P, ps, KV, hd))
+    pt = jnp.array([[1, 2, 3], [3, 1, 5], [5, 4, 2]], jnp.int32)
+    for lengths in ([1, 1, 1], [ps, 2 * ps, 3 * ps], [ps + 1, 1, 2 * ps - 1]):
+        lv = jnp.asarray(lengths, jnp.int32)
+        out = ops.paged_attention(q, kp, vp, pt, lv)
+        expect = ref.paged_attention_ref(q, kp, vp, pt, lv)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   rtol=2e-5, atol=2e-5)
+    # garbage in pages past the length must not change the result
+    kp2 = kp.at[4].set(1e4)
+    vp2 = vp.at[4].set(-1e4)
+    lv = jnp.array([ps, ps, ps], jnp.int32)  # page 4 only in masked tails
+    out = ops.paged_attention(q, kp2, vp2, pt, lv)
+    expect = ref.paged_attention_ref(q, kp, vp, pt, lv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # rwkv6_scan
 # ---------------------------------------------------------------------------
 

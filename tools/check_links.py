@@ -1,0 +1,73 @@
+#!/usr/bin/env python
+"""Markdown link checker (stdlib-only, no network).
+
+Walks every ``*.md`` file in the repo and verifies that each relative
+link target exists on disk (anchors are stripped; http(s)/mailto links
+are skipped — CI must not depend on the network).  Exits non-zero with a
+list of broken links, so documentation cannot reference files that were
+moved or never written.
+
+Usage:  python tools/check_links.py [repo_root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# [text](target) — excluding images is pointless, they must exist too
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_SCHEMES = ("http://", "https://", "mailto:")
+SKIP_DIRS = {".git", "__pycache__", ".pytest_cache", "node_modules"}
+
+
+def iter_markdown(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in SKIP_DIRS]
+        for name in filenames:
+            if name.endswith(".md"):
+                yield os.path.join(dirpath, name)
+
+
+def check_file(path: str):
+    """(number of relative links, [(lineno, target, resolved) broken])."""
+    n_links = 0
+    broken = []
+    with open(path, encoding="utf-8") as f:
+        for lineno, line in enumerate(f, 1):
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_SCHEMES) or target.startswith("#"):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                n_links += 1
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), rel))
+                if not os.path.exists(resolved):
+                    broken.append((lineno, target, resolved))
+    return n_links, broken
+
+
+def main() -> int:
+    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")
+    n_files = n_links = 0
+    failures = []
+    for path in sorted(iter_markdown(root)):
+        n_files += 1
+        links, broken = check_file(path)
+        n_links += links
+        for lineno, target, resolved in broken:
+            failures.append(f"{os.path.relpath(path, root)}:{lineno}: "
+                            f"broken link {target!r} -> {resolved}")
+    if failures:
+        print("\n".join(failures), file=sys.stderr)
+        print(f"\n{len(failures)} broken link(s)", file=sys.stderr)
+        return 1
+    print(f"checked {n_files} markdown files, {n_links} relative links: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,58 @@
+#!/usr/bin/env python
+"""Execute the README quickstart verbatim, so the docs cannot rot.
+
+Extracts every ``bash`` code fence between the ``<!-- quickstart-begin -->``
+and ``<!-- quickstart-end -->`` markers in ``README.md`` and runs each
+command through the shell from the repo root.  Whatever a reader would
+copy-paste is exactly what CI executes — if a flag is renamed or an entry
+point moves, this fails before the doc misleads anyone.
+
+Usage:  python tools/run_quickstart.py [readme_path]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+import time
+
+
+def extract_commands(readme: str):
+    m = re.search(r"<!-- quickstart-begin -->(.*?)<!-- quickstart-end -->",
+                  readme, re.S)
+    if not m:
+        raise SystemExit("README has no quickstart markers")
+    commands = []
+    for fence in re.findall(r"```bash\n(.*?)```", m.group(1), re.S):
+        # join backslash continuations, drop comments/blank lines
+        joined = re.sub(r"\\\n\s*", " ", fence)
+        for line in joined.splitlines():
+            line = line.strip()
+            if line and not line.startswith("#"):
+                commands.append(line)
+    if not commands:
+        raise SystemExit("quickstart markers contain no bash commands")
+    return commands
+
+
+def main() -> int:
+    path = sys.argv[1] if len(sys.argv) > 1 else "README.md"
+    root = os.path.dirname(os.path.abspath(path)) or "."
+    with open(path, encoding="utf-8") as f:
+        commands = extract_commands(f.read())
+    for i, cmd in enumerate(commands, 1):
+        print(f"[quickstart {i}/{len(commands)}] {cmd}", flush=True)
+        t0 = time.time()
+        proc = subprocess.run(cmd, shell=True, cwd=root)
+        print(f"[quickstart {i}/{len(commands)}] exit={proc.returncode} "
+              f"({time.time() - t0:.1f}s)", flush=True)
+        if proc.returncode != 0:
+            return proc.returncode
+    print(f"quickstart OK: {len(commands)} commands")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
