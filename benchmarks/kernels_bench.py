@@ -146,8 +146,19 @@ def _staging_and_compile_rows(steps: int = 24):
     run(True)  # warm backend/dispatch state; each run still compiles fresh
     us_sync, _ = run(False)
     us_async, traces = run(True)
+    us_auto, _ = run(None)  # default path: engine.resolve_async_staging
     sched = build_schedule(steps, 4, mcfg)
     variants = len(sched.variants())
+    resolved = engine_mod.resolve_async_staging(None, sched.chunks)
+    # the tri-state default must never pick the losing mode: loose 1.25x
+    # bound against the WORSE forced mode so wall-clock noise (runs are a
+    # few seconds, compile included) cannot flake the guard while a gate
+    # that resolves backwards still trips it
+    assert us_auto <= max(us_sync, us_async) * 1.25, (
+        f"auto staging gate ({us_auto / 1e6:.2f}s, resolved "
+        f"async={resolved}) slower than both forced modes "
+        f"(sync {us_sync / 1e6:.2f}s, async {us_async / 1e6:.2f}s)"
+    )
     # CPU caveat: both walls include the per-run compile, and the staging
     # thread competes with XLA for the same cores here — the overlap pays
     # off on a real accelerator, where the device executes while the host
@@ -160,6 +171,10 @@ def _staging_and_compile_rows(steps: int = 24):
               "speedup_vs_sync": us_sync / us_async,
               "chunk_traces": traces, "schedule_variants": variants,
               "padded_steps": sched.num_padded_steps()})),
+        ("engine_run_auto_staging", us_auto / steps,
+         fmt({"steps": steps, "record_every": 4,
+              "resolved_async": int(resolved),
+              "speedup_vs_sync": us_sync / us_auto})),
     ]
 
 

@@ -23,13 +23,31 @@ Rows (CSV via benchmarks/run.py, mirrored into
                           paged-KV runtime: one decode compile total
                           (asserted), per-prompt-length prefill compiles,
                           admissions/retirements never retrace.
+  serve_driver_whole      an SLO workload (two long prompts arriving just
+                          ahead of a burst of short ones) through the
+                          async request driver with whole-prompt prefill:
+                          a long admission blocks the queue, so the short
+                          requests' tail TTFT absorbs both long prefills.
+  serve_driver_chunked    the same workload with chunked prefill
+                          (interleaved round-robin with decode): short
+                          requests slip between a long prompt's chunks,
+                          so their tail TTFT is bounded by one chunk, not
+                          one prompt.  Derived columns report p50/p99
+                          TTFT over all requests AND over the shorts
+                          alone — the latter is the SLO number chunking
+                          exists to fix.
 
 Steady-state rows (oldloop/scan/member/ensemble) exclude compile; the two
-mixed-stream rows are cold on purpose.  Trace counts are measured by the
-engines' counters, not inferred.  ``--smoke`` runs the CI fast-lane guard:
-tiny config, assert the scan path compiled decode exactly once, the
-continuous runtime compiled decode exactly once for the whole stream, and
-continuous beat static on the mixed stream — then still emits the JSON.
+mixed-stream rows are cold on purpose; the driver rows are warmed (their
+compiles are shared executables, not per-request work) so the TTFT
+percentiles measure scheduling, not tracing.  Trace counts are measured
+by the engines' counters, not inferred.  ``--smoke`` runs the CI
+fast-lane guard: tiny config, assert the scan path compiled decode
+exactly once, the continuous runtime compiled decode exactly once for
+the whole stream, continuous beat static on the mixed stream, chunked
+beat whole-prompt on the shorts' tail TTFT, and a resubmitted prompt's
+suffix-only prefill skipped its LRU-cached prefix pages (FLOP accounting
+by the server's own token counters) — then still emits the JSON.
 """
 
 from __future__ import annotations
@@ -112,6 +130,57 @@ def _run_mixed(cfg, soup, reqs, page_size: int, max_slots: int):
     cont_s = _time.perf_counter() - t0
     assert len(out) == len(reqs)
     return static_s, static_traces, cont_s, server
+
+
+def _driver_workload(cfg, quick: bool = True):
+    """The SLO stress shape: two LONG prompts arrive first, then a burst
+    of short ones right behind them.  Whole-prompt admission makes every
+    short wait out both long prefills; chunked admission lets them
+    interleave.  Fresh Request objects every call (runs mutate nothing,
+    but sharing uids across servers would make the metrics lie)."""
+    import numpy as np
+
+    from repro.serving import batching
+
+    rng = np.random.default_rng(7)
+    L, S, n_short, max_new = (96, 12, 6, 8) if quick else (256, 24, 12, 16)
+    reqs = [batching.Request(f"long{i}",
+                             rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32),
+                             max_new)
+            for i in range(2)]
+    reqs += [batching.Request(f"short{i}",
+                              rng.integers(0, cfg.vocab_size, (S,)).astype(np.int32),
+                              max_new)
+             for i in range(n_short)]
+    return reqs
+
+
+def _run_driver(cfg, soup, chunk, quick: bool = True, page_size: int = 8):
+    """(summary, short_summary, server, seconds) for one driver variant.
+    One warm pass populates the shared executable cache; the timed pass
+    uses a fresh server so its stats and the TTFT percentiles are clean."""
+    import time as _time
+
+    from repro.serving import batching
+    from repro.serving.driver import RequestDriver, summarize
+
+    def serve(reqs):
+        pages = sum(-(-(len(r.tokens) + r.max_new) // page_size)
+                    for r in reqs)
+        server = batching.ContinuousServer(
+            soup, cfg, page_size=page_size, max_slots=len(reqs),
+            num_pages=pages + 8, retain_pages=True)
+        driver = RequestDriver(server, prefill_chunk=chunk)
+        t0 = _time.perf_counter()
+        metrics = driver.run(reqs)
+        return metrics, server, _time.perf_counter() - t0
+
+    serve(_driver_workload(cfg, quick))                      # warm compiles
+    batching.reset_trace_counts()
+    metrics, server, dt = serve(_driver_workload(cfg, quick))
+    shorts = {uid: m for uid, m in metrics.items()
+              if str(uid).startswith("short")}
+    return summarize(metrics), summarize(shorts), server, dt
 
 
 def run(quick: bool = True):
@@ -200,6 +269,42 @@ def run(quick: bool = True):
          "peak_pages": st["peak_pages_in_use"],
          "speedup_vs_static": cont_toks / static_toks})
 
+    # --- async driver: whole-prompt vs chunked prefill, SLO percentiles ---
+    for label, chunk in (("whole", None), ("chunked", 16)):
+        s, shorts, server, dt = _run_driver(cfg, soup, chunk, quick)
+        st = server.stats
+        add(f"serve_driver_{label}", dt * 1e6,
+            {"tok_s": s["tokens_per_s"], "requests": s["requests"],
+             "ttft_p50_ms": s["ttft_p50_ms"], "ttft_p99_ms": s["ttft_p99_ms"],
+             "short_ttft_p50_ms": shorts["ttft_p50_ms"],
+             "short_ttft_p99_ms": shorts["ttft_p99_ms"],
+             "intertoken_p99_ms": s["intertoken_p99_ms"],
+             "decode_traces": batching.decode_trace_count(),
+             "prefill_traces": batching.prefill_trace_count(),
+             "prefill_tokens": st["prefill_tokens"],
+             "prefix_tokens_reused": st["prefix_tokens_reused"],
+             "prefill_chunk": chunk or 0})
+        if label == "chunked":
+            # suffix-only prefill: resubmit a prompt sharing the first
+            # long prompt's opening pages — they are parked on the
+            # retained server's LRU, so the new admission must share
+            # them and prefill ONLY the fresh suffix (token accounting
+            # by the server's own counters, not wall clock)
+            import numpy as np
+
+            long0 = _driver_workload(cfg, quick)[0].tokens
+            keep = (64 // server.page_size) * server.page_size
+            re_prompt = np.concatenate([
+                np.asarray(long0[:keep]),
+                np.full((server.page_size,), 3, np.int32)])
+            before = dict(st)
+            server.run([batching.Request("resubmit", re_prompt, 4)])
+            reused = st["prefix_tokens_reused"] - before["prefix_tokens_reused"]
+            suffix = st["prefill_tokens"] - before["prefill_tokens"]
+            results["serve_driver_chunked"]["resubmit_prefix_reused"] = reused
+            results["serve_driver_chunked"]["resubmit_suffix_tokens"] = suffix
+            results["serve_driver_chunked"]["resubmit_prompt_tokens"] = len(re_prompt)
+
     os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
     with open(JSON_OUT, "w") as f:
         json.dump({"batch": batch, "prompt": prompt, "max_new": max_new,
@@ -243,6 +348,34 @@ def smoke() -> None:
     assert cont["tok_s"] > stat["tok_s"], (
         f"continuous ({cont['tok_s']:.0f} tok/s) must beat static "
         f"shape-bucketing ({stat['tok_s']:.0f} tok/s) on mixed traffic"
+    )
+    whole = results["serve_driver_whole"]
+    chunked = results["serve_driver_chunked"]
+    # the driver rows are warmed, so the timed pass must hit the shared
+    # executable cache: ZERO new decode/prefill traces, not even one
+    assert whole["decode_traces"] == 0 and chunked["decode_traces"] == 0, (
+        f"warmed driver runs must not retrace decode "
+        f"(whole {whole['decode_traces']}, chunked {chunked['decode_traces']})"
+    )
+    assert whole["prefill_traces"] == 0 and chunked["prefill_traces"] == 0, (
+        f"warmed driver runs must not retrace prefill chunks "
+        f"(whole {whole['prefill_traces']}, chunked {chunked['prefill_traces']})"
+    )
+    assert chunked["short_ttft_p99_ms"] < whole["short_ttft_p99_ms"], (
+        f"chunked prefill must beat whole-prompt on the short requests' "
+        f"tail TTFT (chunked p99 {chunked['short_ttft_p99_ms']:.1f}ms vs "
+        f"whole {whole['short_ttft_p99_ms']:.1f}ms)"
+    )
+    assert chunked["resubmit_prefix_reused"] > 0, (
+        "resubmitted prompt must share its LRU-retained prefix pages"
+    )
+    assert (chunked["resubmit_suffix_tokens"]
+            == chunked["resubmit_prompt_tokens"]
+            - chunked["resubmit_prefix_reused"]), (
+        f"suffix-only prefill must compute exactly the uncached tokens: "
+        f"prefilled {chunked['resubmit_suffix_tokens']} of "
+        f"{chunked['resubmit_prompt_tokens']} with "
+        f"{chunked['resubmit_prefix_reused']} reused"
     )
     from benchmarks._util import print_rows
 

@@ -9,7 +9,12 @@ tokens/sec and the engine's compile behavior.  Two runtimes:
   * ``--continuous`` — the continuous-batching runtime over a paged KV
     cache (`repro.serving.batching`): a mixed-length request stream is
     admitted into ``--max-slots`` slots and decoded with exactly one
-    compiled step program, page tables and all lengths traced.
+    compiled step program, page tables and all lengths traced;
+  * ``--driver`` — the async request driver (`repro.serving.driver`) on
+    top of the continuous runtime: timed (``--arrival-rate``) arrivals,
+    chunked prefill (``--prefill-chunk``) interleaved with in-flight
+    decode, LRU page retention (``--retain-pages``), and per-request
+    TTFT/latency percentiles instead of aggregate tokens/sec alone.
 
 Copy-pasteable examples:
 
@@ -23,6 +28,9 @@ Copy-pasteable examples:
 
   python -m repro.launch.serve --arch llama3.2-3b --reduced --continuous \\
       --requests 16 --max-slots 4 --page-size 16 --max-new 32
+
+  python -m repro.launch.serve --arch llama3.2-3b --reduced --driver \\
+      --arrival-rate 50 --prefill-chunk 16 --retain-pages --requests 16
 
 ``--ckpt`` restores a *population* checkpoint (a stacked pytree written by
 ``repro.train.checkpoint.save``, e.g. ``--ckpt-population`` from the train
@@ -173,6 +181,51 @@ def _serve_continuous(popn, cfg, args):
     return out
 
 
+def _serve_driver(popn, cfg, args):
+    """Serve the mixed stream through the async request driver: timed
+    (Poisson or back-to-back) arrivals, chunked prefill interleaved with
+    decode, per-request TTFT/latency percentiles from the driver's
+    metrics — the SLO view of the same runtime ``--continuous`` measures
+    for throughput."""
+    from repro.serving.driver import RequestDriver, poisson_arrivals, summarize
+
+    max_pages = -(-(args.seq_len + args.max_new) // args.page_size)
+    server = batching.ContinuousServer.from_trained(
+        popn, cfg, mode=args.mode, member=args.member,
+        temperature=args.temperature, page_size=args.page_size,
+        max_slots=args.max_slots, num_pages=args.num_pages,
+        max_pages_per_slot=max_pages, retain_pages=args.retain_pages,
+    )
+    reqs = mixed_stream(cfg, args.requests, args.seq_len, args.max_new,
+                        args.seed, args.temperature, share_prefix_every=4)
+    chunk = args.prefill_chunk if args.prefill_chunk > 0 else None
+    driver = RequestDriver(server, prefill_chunk=chunk)
+    arrivals = (poisson_arrivals(reqs, args.arrival_rate, seed=args.seed)
+                if args.arrival_rate > 0 else reqs)
+    batching.reset_trace_counts()
+    metrics = driver.run(arrivals)
+    s = summarize(metrics)
+    st = server.stats
+    print(f"driver mode={args.mode} requests={s['requests']} "
+          f"slots={args.max_slots} chunk={chunk} "
+          f"arrival_rate={args.arrival_rate or 'back-to-back'}")
+    print(f"  {s['tokens_per_s']:9.1f} tok/s  "
+          f"ttft p50 {s['ttft_p50_ms']:.1f}ms p99 {s['ttft_p99_ms']:.1f}ms  "
+          f"intertoken p99 {s['intertoken_p99_ms']:.2f}ms  "
+          f"latency p99 {s['latency_p99_ms']:.1f}ms")
+    print(f"  decode traces {batching.decode_trace_count()}, "
+          f"prefill traces {batching.prefill_trace_count()}, "
+          f"prefill tokens {st['prefill_tokens']} "
+          f"(prefix reused {st['prefix_tokens_reused']}), "
+          f"lru hits {st['lru_hits']} evictions {st['lru_evictions']}")
+    assert s["requests"] == len(reqs)
+    # suffix-prefill configs decode through ONE program for the stream
+    # (a fresh process compiles it exactly once — the CI driver smoke
+    # rides on this)
+    assert batching.decode_trace_count() <= 1
+    return metrics
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description=__doc__.splitlines()[0],
@@ -226,6 +279,21 @@ def main(argv=None):
                     help="continuous: tokens per KV page")
     ap.add_argument("--num-pages", type=int, default=256,
                     help="continuous: KV page-pool size shared by all slots")
+    ap.add_argument("--driver", action="store_true",
+                    help="serve the stream through the async request driver "
+                         "(timed arrivals, chunked prefill interleaved with "
+                         "decode, TTFT/latency percentiles)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="driver: Poisson arrival rate in requests/sec "
+                         "(0 = submit the whole stream back-to-back)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="driver: prefill at most this many prompt tokens "
+                         "per tick, interleaved with decode steps "
+                         "(0 = whole remaining suffix in one program)")
+    ap.add_argument("--retain-pages", action="store_true",
+                    help="driver: keep refcount-0 prefix pages on an LRU "
+                         "list (evicted only under pool pressure) so "
+                         "recurring prompts skip their prefill compute")
     args = ap.parse_args(argv)
 
     cfg = get_arch(args.arch)
@@ -238,6 +306,12 @@ def main(argv=None):
         sample_key = None
 
     popn = _population(args, cfg, key)
+
+    if args.driver:
+        if args.mesh != "none":
+            ap.error("--driver does not take --mesh (single-host runtime)")
+        _serve_driver(popn, cfg, args)
+        return
 
     if args.continuous:
         if args.mesh != "none":

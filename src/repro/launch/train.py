@@ -71,8 +71,10 @@ def main(argv=None):
                     help="history record period (default: steps // 10); also "
                          "the fused engine's chunk window length")
     ap.add_argument("--sync-staging", action="store_true",
-                    help="shard_map engine: disable the double-buffered "
-                         "staging thread (stage each chunk synchronously)")
+                    help="shard_map engine: force synchronous per-chunk "
+                         "staging; default auto-gates the double-buffered "
+                         "staging thread (off on CPU when chunks are too "
+                         "short to amortize the thread handoff)")
     ap.add_argument("--no-gate-split", action="store_true",
                     help="shard_map engine: keep one dispatch per record "
                          "window instead of splitting no-mix gate runs onto "
@@ -147,7 +149,8 @@ def main(argv=None):
     mesh = None
     if args.engine == "shard_map":
         engine_opts = {
-            "async_staging": not args.sync_staging,
+            # False forces sync; None = engine.resolve_async_staging gate
+            "async_staging": False if args.sync_staging else None,
             "split_gate_runs": not args.no_gate_split,
             "pallas_shuffle": args.pallas_shuffle,
         }

@@ -418,6 +418,43 @@ def gqa_decode_paged(p, cfg: ModelConfig, x, k_pool_l, v_pool_l, page_table,
     return out.reshape(B, 1, -1) @ p["wo"], k_pool_l, v_pool_l
 
 
+def gqa_prefill_paged(p, cfg: ModelConfig, x, k_pool_l, v_pool_l, page_table,
+                      positions):
+    """Chunk/suffix prefill for ONE slot against the paged pool.
+
+      x          : (1, T, D) — hidden states of a contiguous prompt chunk
+      k/v_pool_l : (P, page_size, KV, hd) — this layer's page pool
+      page_table : (max_pages,) int32 — the slot's pages, prompt order
+      positions  : (T,) int32 — absolute positions pos0 .. pos0+T-1
+                   (traced, so one compile serves every chunk offset)
+
+    Writes the chunk's K/V into the slot's pages (all write targets are
+    slot-owned — cached prefix pages sit strictly below ``positions[0]``
+    and are never written), then attends over the table-gathered context
+    under the causal mask ``j <= position``.  Rows are bitwise-identical
+    to the same rows of the whole-prompt :func:`gqa_prefill`: q/k/v are
+    per-position ops, the gathered context lists positions in order, and
+    the masked tail contributes exact zeros to the softmax and the value
+    sum — same argument (and same test evidence) as
+    :func:`gqa_decode_paged` vs :func:`gqa_decode`.
+    """
+    B, T, _ = x.shape
+    assert B == 1
+    q, k, v = _qkv(p, cfg, x, positions)
+    page_size = k_pool_l.shape[1]
+    pos = positions.astype(jnp.int32)
+    page_idx = page_table[pos // page_size]  # (T,) — in-chunk positions are
+    offset = pos % page_size                 # distinct, so no scatter dups
+    k_pool_l = k_pool_l.at[page_idx, offset].set(k[0].astype(k_pool_l.dtype))
+    v_pool_l = v_pool_l.at[page_idx, offset].set(v[0].astype(v_pool_l.dtype))
+    kc = k_pool_l[page_table].reshape(1, -1, cfg.num_kv_heads, k.shape[-1])
+    vc = v_pool_l[page_table].reshape(1, -1, cfg.num_kv_heads, v.shape[-1])
+    ctx = kc.shape[1]
+    mask = jnp.arange(ctx)[None, :] <= pos[:, None]  # (T, ctx)
+    out = sdpa(q, kc, vc, mask, cfg.num_kv_heads)
+    return out.reshape(B, T, -1) @ p["wo"], k_pool_l, v_pool_l
+
+
 # ---------------------------------------------------------------------------
 # cross attention (whisper decoder)
 # ---------------------------------------------------------------------------

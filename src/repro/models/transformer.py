@@ -413,6 +413,65 @@ def decode_step_paged(params, cfg: ModelConfig, tokens, positions, pools,
     return _logits(params, cfg, x), {"k": k_pool, "v": v_pool}
 
 
+def paged_prefill_supported(cfg: ModelConfig) -> Optional[str]:
+    """None if ``prefill_paged`` can serve this config, else the reason.
+
+    Everything :func:`paged_decode_supported` rejects, plus non-naive
+    attention: ``attn_impl="chunked"`` prefills through the online-softmax
+    formulation whose numerics differ from the paged gather+sdpa attend,
+    so suffix/chunk prefill could not keep the bitwise parity contract."""
+    reason = paged_decode_supported(cfg)
+    if reason is not None:
+        return reason
+    if cfg.attn_impl != "naive":
+        return (f"attn_impl={cfg.attn_impl!r} prefill numerics are not "
+                "bitwise-compatible with the paged gather+sdpa attend")
+    return None
+
+
+def prefill_paged(params, cfg: ModelConfig, tokens, pos0, pools, page_table):
+    """Chunk/suffix prefill for ONE serving slot over the paged pool.
+
+      tokens     : (T,) int32 — a contiguous slice of the prompt
+      pos0       : int or traced scalar — absolute position of ``tokens[0]``
+                   (traced by the serving runtime, so ONE compile per chunk
+                   length serves every offset and every slot)
+      pools      : {"k","v"}: (L, P, page_size, KV, hd)
+      page_table : (max_pages,) int32 — the slot's pages in prompt order;
+                   entries below ``pos0 // page_size`` may be chain-hash
+                   shared prefix pages (read, never written)
+
+    Earlier context — a deduped prefix and/or previously prefilled chunks —
+    is read straight from the pool, so a suffix admission skips the cached
+    prefix's FLOPs entirely.  Returns ``(logits (1,1,V) for the chunk's
+    last position, pools)``; rows written/read are bitwise-identical to
+    the whole-prompt :func:`prefill` (see ``gqa_prefill_paged``)."""
+    reason = paged_prefill_supported(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"paged prefill: {reason}")
+    pos0 = jnp.asarray(pos0, jnp.int32)
+    T = tokens.shape[0]
+    positions = pos0 + jnp.arange(T, dtype=jnp.int32)
+    x = _embed_tokens(params, cfg, tokens[None], pos0=pos0)
+
+    def body(h, xs):
+        block_l, kp_l, vp_l = xs
+        a_in = L.rmsnorm(block_l["ln1"], h, cfg.norm_eps)
+        a, kp_l, vp_l = L.gqa_prefill_paged(
+            block_l["attn"], cfg, a_in, kp_l, vp_l, page_table, positions,
+        )
+        h = h + a
+        y, _ = _mlp_apply(block_l["mlp"], cfg,
+                          L.rmsnorm(block_l["ln2"], h, cfg.norm_eps))
+        return h + y, (kp_l, vp_l)
+
+    x, (k_pool, v_pool) = jax.lax.scan(
+        body, x, (params["blocks"], pools["k"], pools["v"]),
+        unroll=cfg.scan_unroll,
+    )
+    return _logits(params, cfg, x[:, -1:]), {"k": k_pool, "v": v_pool}
+
+
 def decode_scan(params, cfg: ModelConfig, first, cache, start_pos, num_steps,
                 next_fn, step_fn=None):
     """Fused multi-token decode: ONE ``lax.scan`` over token positions.

@@ -1,6 +1,13 @@
 """Serving: fused scan engine + continuous-batching runtime (see README.md)."""
 
 from repro.serving.batching import ContinuousServer, Request, Result
+from repro.serving.driver import (
+    QueueFull,
+    RequestDriver,
+    RequestMetrics,
+    poisson_arrivals,
+    summarize,
+)
 from repro.serving.engine import (
     MODES,
     averaged_params,
@@ -20,8 +27,13 @@ from repro.serving.engine import (
 __all__ = [
     "ContinuousServer",
     "MODES",
+    "QueueFull",
     "Request",
+    "RequestDriver",
+    "RequestMetrics",
     "Result",
+    "poisson_arrivals",
+    "summarize",
     "averaged_params",
     "clear_executable_cache",
     "decode_trace_count",

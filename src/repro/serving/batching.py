@@ -19,11 +19,23 @@ request to the worst case or re-compiles per shape.  This runtime serves a
     ids, positions, table entries), never shapes — so the decode program
     traces exactly once per pool geometry, guarded by
     :func:`decode_trace_count` (same contract as ``serving.engine``).
-  * **Prefix page reuse** — full prompt pages are keyed by a chained
-    content hash; a request whose prompt shares a page-aligned prefix with
-    an in-flight request reuses those pages (refcount bump) instead of
-    allocating + rewriting them.  Pages are freed when their refcount
-    drops to zero at retirement.
+  * **Prefix page reuse + suffix-only prefill** — full prompt pages are
+    keyed by a chained content hash; a request whose prompt shares a
+    page-aligned prefix with an in-flight request reuses those pages
+    (refcount bump) and prefills ONLY the uncached suffix through
+    ``models.transformer.prefill_paged`` (the cached prefix's FLOPs are
+    skipped entirely — ``stats["prefill_tokens"]`` accounts for it).
+  * **LRU page retention** (``retain_pages=True``) — hashed pages whose
+    refcount drops to zero park on an LRU list instead of the free list
+    and are evicted only under pool pressure, so a shared system prompt
+    costs prefill compute once across the server's lifetime, not once
+    per concurrent burst.
+  * **Chunked prefill** — admission is split into ``begin_admit`` (page +
+    slot reservation, no compute) and ``prefill_step`` (one fixed-size
+    chunk of the prompt through the chunk program, compiled once per
+    chunk length with a *traced* offset).  ``serving.driver`` interleaves
+    chunks of a long prompt with decode steps of in-flight streams, which
+    bounds their inter-token stalls and queued requests' TTFT.
   * **Paged attention** — the decode attend either gathers pages in jnp
     (``kernels.ref.paged_attention_ref``, the CPU default) or runs the
     fused Pallas kernel (``kernels.paged_attention``, the TPU default;
@@ -56,7 +68,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from collections import deque
+from collections import OrderedDict, deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -97,7 +109,9 @@ def decode_trace_count() -> int:
 
 
 def prefill_trace_count() -> int:
-    """Traces of the admit (prefill+commit) program (1 per prompt length)."""
+    """Traces of the prefill programs: one per distinct chunk length (the
+    chunk offset ``pos0`` is traced, so chunks of one length share a
+    program across slots, offsets, and cached-prefix depths)."""
     return _PREFILL_TRACES[0]
 
 
@@ -166,6 +180,34 @@ def _total_pages(prompt_len: int, max_new: int, page_size: int) -> int:
     return max(-(-stored // page_size), 1)
 
 
+@dataclasses.dataclass
+class _Prefill:
+    """An admission in progress: pages + a slot are reserved, but only
+    ``pos`` of the prompt's tokens are in the pool so far.  Produced by
+    ``ContinuousServer._begin_admit``; advanced (one chunk per call) by
+    ``_prefill_step`` until the prompt is fully prefilled, at which point
+    the first token is sampled and the slot goes live."""
+
+    uid: Any
+    prompt: np.ndarray
+    max_new: int
+    key: jax.Array
+    pages: List[int]         # ALL prompt pages (shared prefix + owned)
+    total_pages: int
+    pos: int                 # tokens already in the pool
+    cached_tokens: int       # prefix tokens reused (their FLOPs skipped)
+    slot_index: int          # reserved decode slot
+    digests: List[bytes]     # chain hashes of the prompt's full pages
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def remaining(self) -> int:
+        return self.prompt_len - self.pos
+
+
 # ---------------------------------------------------------------------------
 # host-side page pool: free list, refcounts, prefix hash index
 # ---------------------------------------------------------------------------
@@ -177,31 +219,63 @@ class _PagePool:
     Pages are refcounted: a page backing a shared prompt prefix is held by
     every slot that deduped onto it and freed when the last holder
     retires.  ``prefix`` maps the chained content hash of a page-aligned
-    prompt chunk to the live page holding it."""
+    prompt chunk to the live page holding it.
 
-    def __init__(self, num_pages: int):
+    With ``retain=True``, a hashed page whose refcount drops to zero is
+    *parked* on an LRU list (content + hash kept, sharable) instead of
+    freed; ``alloc`` evicts the oldest parked page only once the free
+    list is empty.  Every page is always in exactly one of three states —
+    free, parked (LRU), or refcounted — so
+    ``free_count + retained_count + len(refcount) == num_pages - 1``."""
+
+    def __init__(self, num_pages: int, retain: bool = False):
         self.num_pages = num_pages
+        self.retain = retain
         self.free: deque = deque(range(1, num_pages))  # page 0 = scratch
         self.refcount: Dict[int, int] = {}
         self.prefix: Dict[bytes, int] = {}
         self.hash_of: Dict[int, bytes] = {}
+        self.lru: "OrderedDict[int, None]" = OrderedDict()  # oldest first
+        self.lru_hits = 0
+        self.lru_evictions = 0
 
     @property
     def free_count(self) -> int:
         return len(self.free)
 
     @property
+    def retained_count(self) -> int:
+        return len(self.lru)
+
+    @property
+    def available_count(self) -> int:
+        """Pages an admission may claim: free + evictable (parked)."""
+        return len(self.free) + len(self.lru)
+
+    @property
     def used_count(self) -> int:
-        return (self.num_pages - 1) - len(self.free)
+        """Pages held by live slots/prefills (parked pages are not used)."""
+        return len(self.refcount)
 
     def alloc(self) -> int:
-        page = self.free.popleft()
+        if self.free:
+            page = self.free.popleft()
+        else:  # pool pressure: evict the least-recently-parked page
+            page, _ = self.lru.popitem(last=False)
+            del self.prefix[self.hash_of.pop(page)]
+            self.lru_evictions += 1
         self.refcount[page] = 1
         return page
 
     def share(self, digest: bytes) -> Optional[int]:
         page = self.prefix.get(digest)
-        if page is not None:
+        if page is None:
+            return None
+        if page in self.lru:  # revive: parked content is still valid KV
+            del self.lru[page]
+            self.refcount[page] = 1
+            self.lru_hits += 1
+        else:
             self.refcount[page] += 1
         return page
 
@@ -213,6 +287,9 @@ class _PagePool:
         self.refcount[page] -= 1
         if self.refcount[page] == 0:
             del self.refcount[page]
+            if self.retain and page in self.hash_of:
+                self.lru[page] = None  # park, most-recently-used last
+                return
             digest = self.hash_of.pop(page, None)
             if digest is not None:
                 self.prefix.pop(digest, None)
@@ -308,6 +385,48 @@ def _build_admit(cfg: ModelConfig, ensemble: bool, S: int, n_pages: int,
     return jax.jit(program, donate_argnums=donate_argnums((1, 2)))
 
 
+def _build_chunk(cfg: ModelConfig, ensemble: bool, greedy: bool):
+    """One prompt chunk through ``M.prefill_paged``: compiled once per
+    chunk LENGTH — the offset ``pos0``, the page table, and the sampling
+    key are all traced, so one program serves every slot, every chunk
+    position, and every cached-prefix depth.
+
+    The returned ``token0`` is the first sampled token; the host uses it
+    only when the chunk completes the prompt (intermediate chunks' last
+    rows are mid-prompt positions)."""
+
+    def program(params, k_pool, v_pool, tokens, pos0, table, key,
+                temperature):
+        _PREFILL_TRACES[0] += 1
+        if ensemble:
+            def member(p, kp, vp):
+                lg, pools = M.prefill_paged(
+                    p, cfg, tokens, pos0, {"k": kp, "v": vp}, table)
+                return lg, pools["k"], pools["v"]
+
+            lgs, k_pool, v_pool = jax.vmap(member)(params, k_pool, v_pool)
+            last = averaging.balanced_mean(lgs)[:, -1]
+        else:
+            lg, pools = M.prefill_paged(
+                params, cfg, tokens, pos0, {"k": k_pool, "v": v_pool}, table)
+            k_pool, v_pool = pools["k"], pools["v"]
+            last = lg[:, -1]
+        token0 = _sample_steps(last, key[None], jnp.zeros((1,), jnp.int32),
+                               temperature, greedy)[0]
+        return k_pool, v_pool, token0
+
+    return jax.jit(program, donate_argnums=donate_argnums((1, 2)))
+
+
+def _chunk_program(cfg: ModelConfig, ensemble: bool, T: int, max_pages: int,
+                   page_size: int, num_pages: int, greedy: bool):
+    key = ("cont_chunk", cfg, ensemble, T, max_pages, page_size, num_pages,
+           greedy)
+    if key not in _EXEC_CACHE:
+        _EXEC_CACHE[key] = _build_chunk(cfg, ensemble, greedy)
+    return _EXEC_CACHE[key]
+
+
 def _build_decode(cfg: ModelConfig, ensemble: bool, greedy: bool,
                   use_pallas: bool):
     """THE continuous decode step: one token for the whole in-flight set.
@@ -389,6 +508,16 @@ class ContinuousServer:
         can hold; defaults to the whole pool.
     temperature / use_pallas : stream-wide sampling temperature and
         attend-kernel routing (None = Pallas on TPU, jnp oracle elsewhere).
+    prefill_chunk : split every prompt prefill into chunks of at most this
+        many tokens (None = whole suffix in one program).  ``step()`` still
+        finishes a request's prefill before decoding — chunk/decode
+        INTERLEAVING is the driver's job (``serving.driver``), this knob
+        only fixes the compiled chunk geometry.
+    retain_pages : park refcount-0 hashed pages on an LRU list (evicted
+        under pressure) instead of freeing them, so recurring prompts —
+        a shared system prompt above all — skip their prefill compute on
+        every later request.  Off by default: ``run()``-style one-shot
+        streams expect a drained pool to be empty.
     """
 
     def __init__(self, params: PyTree, cfg: ModelConfig, *,
@@ -396,7 +525,9 @@ class ContinuousServer:
                  page_size: int = 16, max_slots: int = 4,
                  num_pages: int = 64,
                  max_pages_per_slot: Optional[int] = None,
-                 use_pallas: Optional[bool] = None):
+                 use_pallas: Optional[bool] = None,
+                 prefill_chunk: Optional[int] = None,
+                 retain_pages: bool = False):
         if mode not in MODES:
             raise ValueError(
                 f"unknown serving mode {mode!r}; expected one of {MODES}")
@@ -406,6 +537,8 @@ class ContinuousServer:
         if page_size < 1 or max_slots < 1 or num_pages < 2:
             raise ValueError("need page_size >= 1, max_slots >= 1, "
                              "num_pages >= 2 (page 0 is scratch)")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1 (or None)")
         self.cfg = cfg
         self.params = params
         self.ensemble = mode == "ensemble"
@@ -419,6 +552,11 @@ class ContinuousServer:
         if use_pallas is None:
             use_pallas = jax.default_backend() == "tpu"
         self.use_pallas = bool(use_pallas)
+        self.prefill_chunk = prefill_chunk
+        # suffix/chunk prefill needs bitwise-compatible paged numerics;
+        # otherwise admissions fall back to the whole-prompt program with
+        # write-mask dedup (no chunking, prefix pages shared but recomputed)
+        self.suffix_prefill = M.paged_prefill_supported(cfg) is None
 
         n_members = None
         if self.ensemble:
@@ -429,17 +567,21 @@ class ContinuousServer:
                 lambda x: jnp.broadcast_to(x, (n_members,) + x.shape), pools)
         self._k_pool, self._v_pool = pools["k"], pools["v"]
 
-        self._pool = _PagePool(num_pages)
+        self._pool = _PagePool(num_pages, retain=retain_pages)
         self._slots: List[Optional[_Slot]] = [None] * max_slots
+        self._prefills: List[_Prefill] = []   # admission order
+        self._reserved_slots: set = set()
         self._queue: deque = deque()
         self._results: Dict[Any, Result] = {}
         self._dummy_key = jax.random.split(jax.random.key(0), 1)[0]
         geometry = (max_slots, self.max_pages, page_size, num_pages)
         self._decode = _programs(cfg, self.ensemble, geometry, self.greedy,
                                  self.use_pallas)
-        self.stats = {"admitted": 0, "retired": 0, "decode_steps": 0,
-                      "pages_allocated": 0, "pages_shared": 0,
-                      "peak_pages_in_use": 0}
+        self.stats = {"admitted": 0, "retired": 0, "cancelled": 0,
+                      "decode_steps": 0, "pages_allocated": 0,
+                      "pages_shared": 0, "peak_pages_in_use": 0,
+                      "prefill_tokens": 0, "prefix_tokens_reused": 0,
+                      "lru_hits": 0, "lru_evictions": 0}
 
     # -- construction from a trained population -------------------------
 
@@ -453,7 +595,11 @@ class ContinuousServer:
 
     # -- queue API -------------------------------------------------------
 
-    def submit(self, request: Request) -> None:
+    def validate(self, request: Request, pending=()) -> Request:
+        """Check a request the way :meth:`submit` would — shared with the
+        driver, which runs its own queue.  ``pending`` is any extra set of
+        uids the caller already holds.  Returns the request with its
+        prompt normalized to a flat int32 array."""
         tokens = np.asarray(request.tokens, np.int32).reshape(-1)
         if tokens.shape[0] < 1 or request.max_new < 1:
             raise ValueError("need a non-empty prompt and max_new >= 1")
@@ -466,7 +612,8 @@ class ContinuousServer:
         # request completed is fine — long-lived servers recycle ids, and
         # the overwrite is then a new result, not a lost one.)
         in_flight = {s.uid for s in self._slots if s is not None}
-        if request.uid in in_flight or any(
+        in_flight |= {pf.uid for pf in self._prefills}
+        if request.uid in in_flight or request.uid in pending or any(
                 r.uid == request.uid for r in self._queue):
             raise ValueError(
                 f"duplicate request uid {request.uid!r}: a request with "
@@ -480,8 +627,10 @@ class ContinuousServer:
             raise ValueError(
                 f"request {request.uid!r} needs {total} pages "
                 f"(> pool of {self.num_pages - 1} allocatable pages)")
-        self._queue.append(
-            dataclasses.replace(request, tokens=tokens))
+        return dataclasses.replace(request, tokens=tokens)
+
+    def submit(self, request: Request) -> None:
+        self._queue.append(self.validate(request))
 
     @property
     def queue_len(self) -> int:
@@ -494,20 +643,149 @@ class ContinuousServer:
     # -- scheduling ------------------------------------------------------
 
     def _reserved_pages(self) -> int:
-        """Pages the in-flight slots may still demand (lazy growth never
-        fails because admission reserved for everyone's worst case)."""
-        return sum(s.future_pages for s in self._slots if s is not None)
+        """Pages the in-flight slots/prefills may still demand (lazy
+        growth never fails because admission reserved for everyone's
+        worst case)."""
+        live = sum(s.future_pages for s in self._slots if s is not None)
+        live += sum(pf.total_pages - len(pf.pages) for pf in self._prefills)
+        return live
 
-    def _try_admit(self, req: Request) -> bool:
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self._slots):
+            if s is None and i not in self._reserved_slots:
+                return i
+        return None
+
+    def _sync_pool_stats(self) -> None:
+        self.stats["lru_hits"] = self._pool.lru_hits
+        self.stats["lru_evictions"] = self._pool.lru_evictions
+        self.stats["peak_pages_in_use"] = max(
+            self.stats["peak_pages_in_use"], self._pool.used_count)
+
+    # -- chunked/suffix admission (the driver's scheduler hooks) ---------
+
+    def _begin_admit(self, req: Request) -> Optional[_Prefill]:
+        """Reserve a slot + every prompt page for ``req`` — NO compute.
+
+        Finds the longest chain-hash-cached prefix run in the pool, bumps
+        (or LRU-revives) those pages, and allocates the rest, so the
+        returned :class:`_Prefill` starts at ``pos = cached_tokens`` and
+        only the uncached suffix ever runs through a prefill program.
+        Returns None when no slot is free or the worst-case page
+        reservation does not fit."""
         S = int(req.tokens.shape[0])
         n_prompt = max(-(-S // self.page_size), 1)
         total = _total_pages(S, req.max_new, self.page_size)
+        slot_i = self._free_slot()
+        if slot_i is None:
+            return None
 
         digests = _chain_hashes(req.tokens, self.page_size)
-        shared = [self._pool.prefix.get(d) is not None for d in digests]
-        new_now = n_prompt - sum(shared)
-        need = new_now + (total - n_prompt)
-        if self._pool.free_count - self._reserved_pages() < need:
+        cached = 0
+        while (cached < len(digests)
+               and digests[cached] in self._pool.prefix):
+            cached += 1
+        # the suffix must keep >= 1 token: its last-position logits sample
+        # the first output token (a fully cached prompt still runs a
+        # 1-token chunk over the final position)
+        cached = min(cached, (S - 1) // self.page_size)
+
+        # reviving a parked prefix page consumes availability exactly like
+        # an alloc (it leaves the LRU list), so it counts toward need
+        revived = sum(1 for j in range(cached)
+                      if self._pool.prefix[digests[j]] in self._pool.lru)
+        need = (n_prompt - cached) + revived + (total - n_prompt)
+        if self._pool.available_count - self._reserved_pages() < need:
+            return None
+
+        pages: List[int] = []
+        for j in range(cached):
+            pages.append(self._pool.share(digests[j]))
+            self.stats["pages_shared"] += 1
+        for j in range(cached, n_prompt):
+            pages.append(self._pool.alloc())
+            self.stats["pages_allocated"] += 1
+        # NOTE: freshly allocated full pages are NOT registered as sharable
+        # yet — their content does not exist until a prefill chunk writes
+        # it.  ``_prefill_step`` registers each page as its chunk lands,
+        # so a concurrent admission can only dedup onto written pages.
+        self.stats["prefix_tokens_reused"] += cached * self.page_size
+        self._sync_pool_stats()
+
+        key = req.key if req.key is not None else jax.random.key(0)
+        pf = _Prefill(uid=req.uid, prompt=req.tokens, max_new=req.max_new,
+                      key=jax.random.split(key, 1)[0], pages=pages,
+                      total_pages=total, pos=cached * self.page_size,
+                      cached_tokens=cached * self.page_size,
+                      slot_index=slot_i, digests=digests)
+        self._reserved_slots.add(slot_i)
+        self._prefills.append(pf)
+        return pf
+
+    def _prefill_step(self, pf: _Prefill, max_tokens: Optional[int] = None
+                      ) -> bool:
+        """Run ONE prompt chunk (at most ``max_tokens``; None = the whole
+        remaining suffix) through the chunk program.  On the final chunk,
+        samples the first token and installs the slot (or retires it for
+        ``max_new == 1``).  Returns True when the prefill completed."""
+        T = pf.remaining if max_tokens is None else min(max_tokens,
+                                                        pf.remaining)
+        chunk = pf.prompt[pf.pos:pf.pos + T]
+        table = np.full((self.max_pages,), SCRATCH_PAGE, np.int32)
+        table[:len(pf.pages)] = pf.pages
+        program = _chunk_program(self.cfg, self.ensemble, T, self.max_pages,
+                                 self.page_size, self.num_pages, self.greedy)
+        self._k_pool, self._v_pool, token0 = program(
+            self.params, self._k_pool, self._v_pool, jnp.asarray(chunk),
+            jnp.int32(pf.pos), jnp.asarray(table), pf.key,
+            jnp.float32(max(self.temperature, 1e-6)),
+        )
+        written_before = pf.pos
+        pf.pos += T
+        self.stats["prefill_tokens"] += T
+        # register the now-fully-written pages for prefix sharing — never
+        # clobbering a digest already live on another page (possible when
+        # the cached run was capped or LRU eviction broke an older chain:
+        # the old page's release would tear down the new entry)
+        for j in range(written_before // self.page_size,
+                       pf.pos // self.page_size):
+            if j < len(pf.digests) and pf.digests[j] not in self._pool.prefix:
+                self._pool.register(pf.pages[j], pf.digests[j])
+        if pf.remaining:
+            return False
+
+        self._prefills.remove(pf)
+        self._reserved_slots.discard(pf.slot_index)
+        slot = _Slot(uid=pf.uid, prompt=pf.prompt, max_new=pf.max_new,
+                     key=pf.key, pages=pf.pages, total_pages=pf.total_pages,
+                     out=[int(token0)])
+        self.stats["admitted"] += 1
+        if pf.max_new == 1:  # prefill-only request: retire immediately
+            self._retire(slot)
+        else:
+            self._slots[pf.slot_index] = slot
+        return True
+
+    def _try_admit_legacy(self, req: Request) -> bool:
+        """Whole-prompt admission through ``M.prefill`` + write-mask dedup
+        — the fallback when ``M.paged_prefill_supported`` rejects the
+        config (e.g. ``attn_impl="chunked"``, whose prefill numerics the
+        paged attend cannot reproduce bitwise).  Shared prefix pages are
+        skipped at WRITE time but their rows are still computed."""
+        S = int(req.tokens.shape[0])
+        n_prompt = max(-(-S // self.page_size), 1)
+        total = _total_pages(S, req.max_new, self.page_size)
+        slot_i = self._free_slot()
+        if slot_i is None:
+            return False
+
+        digests = _chain_hashes(req.tokens, self.page_size)
+        shared_pages = [self._pool.prefix.get(d) for d in digests]
+        revived = sum(1 for p in shared_pages
+                      if p is not None and p in self._pool.lru)
+        new_now = n_prompt - sum(p is not None for p in shared_pages)
+        need = new_now + revived + (total - n_prompt)
+        if self._pool.available_count - self._reserved_pages() < need:
             return False
 
         pages: List[int] = []
@@ -520,11 +798,11 @@ class ContinuousServer:
             else:
                 page = self._pool.alloc()
                 self.stats["pages_allocated"] += 1
-                if j < len(digests):  # full page: future requests may share
+                if j < len(digests) and digests[j] not in self._pool.prefix:
                     self._pool.register(page, digests[j])
             pages.append(page)
-        self.stats["peak_pages_in_use"] = max(
-            self.stats["peak_pages_in_use"], self._pool.used_count)
+        self._sync_pool_stats()
+        self.stats["prefill_tokens"] += S
 
         key = req.key if req.key is not None else jax.random.key(0)
         slot_key = jax.random.split(key, 1)[0]
@@ -543,11 +821,50 @@ class ContinuousServer:
         if req.max_new == 1:  # prefill-only request: retire immediately
             self._retire(slot)
             return True
-        self._slots[self._slots.index(None)] = slot
+        self._slots[slot_i] = slot
         return True
 
+    def _try_admit(self, req: Request) -> bool:
+        """Fully admit ``req`` (prefill runs to completion within this
+        call — chunk-sized programs if ``prefill_chunk`` is set, but never
+        interleaved with decode; the driver interleaves)."""
+        if not self.suffix_prefill:
+            return self._try_admit_legacy(req)
+        pf = self._begin_admit(req)
+        if pf is None:
+            return False
+        while not self._prefill_step(pf, self.prefill_chunk):
+            pass
+        return True
+
+    def cancel(self, uid: Any) -> bool:
+        """Drop a request wherever it is — queued, prefilling, or decoding
+        — releasing its pages and slot.  Returns False for unknown uids
+        (already finished or never submitted).  No Result is produced."""
+        for r in self._queue:
+            if r.uid == uid:
+                self._queue.remove(r)
+                self.stats["cancelled"] += 1
+                return True
+        for pf in self._prefills:
+            if pf.uid == uid:
+                for page in pf.pages:
+                    self._pool.release(page)
+                self._prefills.remove(pf)
+                self._reserved_slots.discard(pf.slot_index)
+                self.stats["cancelled"] += 1
+                return True
+        for i, slot in enumerate(self._slots):
+            if slot is not None and slot.uid == uid:
+                for page in slot.pages:
+                    self._pool.release(page)
+                self._slots[i] = None
+                self.stats["cancelled"] += 1
+                return True
+        return False
+
     def _admit(self) -> None:
-        while self._queue and None in self._slots:
+        while self._queue and self._free_slot() is not None:
             if not self._try_admit(self._queue[0]):
                 break  # head-of-line blocks until pages free up
             self._queue.popleft()
@@ -559,8 +876,7 @@ class ContinuousServer:
         while len(slot.pages) < need_pages:
             slot.pages.append(self._pool.alloc())
             self.stats["pages_allocated"] += 1
-        self.stats["peak_pages_in_use"] = max(
-            self.stats["peak_pages_in_use"], self._pool.used_count)
+        self._sync_pool_stats()
 
     def _retire(self, slot: _Slot) -> None:
         for page in slot.pages:
@@ -637,5 +953,6 @@ class ContinuousServer:
                 # an idle server that cannot admit is a bookkeeping bug
                 raise RuntimeError(
                     f"scheduler stalled with {len(self._queue)} queued "
-                    f"requests and {self._pool.free_count} free pages")
+                    f"requests and {self._pool.available_count} "
+                    f"available pages")
         return dict(self._results)

@@ -90,6 +90,34 @@ def chunk_trace_count() -> int:
     return _CHUNK_TRACES[0]
 
 
+# Below this average steps-per-chunk, CPU runs are FASTER synchronous:
+# the per-chunk thread handoff outweighs the overlapped staging work
+# (measured ~0.91x sync at 1-step chunks with heavy batch leaves; break
+# even by ~3 steps).  On accelerators the host stages while the device
+# computes, so the overlap always pays once there is a chunk to overlap.
+ASYNC_STAGING_MIN_CHUNK_STEPS = 2
+
+
+def resolve_async_staging(async_staging: Optional[bool],
+                          chunks: List[ChunkPlan],
+                          backend: Optional[str] = None) -> bool:
+    """Tri-state gate for double-buffered staging.  Explicit True/False
+    wins.  ``None`` auto-resolves: off with nothing to overlap (< 2
+    chunks), off on CPU when the schedule's average chunk is shorter
+    than :data:`ASYNC_STAGING_MIN_CHUNK_STEPS` real steps (the staging
+    thread's handoff costs more than it hides there), on otherwise."""
+    if async_staging is not None:
+        return bool(async_staging)
+    if len(chunks) < 2:
+        return False
+    if backend is None:
+        backend = jax.default_backend()
+    if backend == "cpu":
+        avg = sum(c.length for c in chunks) / len(chunks)
+        return avg >= ASYNC_STAGING_MIN_CHUNK_STEPS
+    return True
+
+
 def make_fused_chunk_fn(
     mesh,
     mcfg: MixingConfig,
@@ -252,7 +280,7 @@ def train_population_sharded(
     record_every: int = 25,
     record_fn: Optional[Callable[[int, PyTree], Dict[str, float]]] = None,
     mesh=None,
-    async_staging: bool = True,
+    async_staging: Optional[bool] = None,
     split_gate_runs: bool = True,
     param_specs=None,
     pallas_shuffle: bool = False,
@@ -263,7 +291,9 @@ def train_population_sharded(
     ``(ens[, data][, model])`` meshes route mixing through the shard-local
     planner — see :mod:`repro.core.shardplan` — and shard batches over the
     data axes), ``async_staging`` (double-buffer chunk k+1's batches on a
-    staging thread while chunk k executes), ``split_gate_runs`` (dispatch
+    staging thread while chunk k executes; ``None`` auto-gates via
+    :func:`resolve_async_staging` — off on CPU schedules whose chunks are
+    too short to amortize the thread handoff), ``split_gate_runs`` (dispatch
     no-mix spans on the collective-free executable; see
     :mod:`repro.train.schedule`), ``param_specs`` (member-level
     ``PartitionSpec``s, e.g. from :func:`repro.sharding.rules.param_pspecs`;
@@ -433,7 +463,8 @@ def train_population_sharded(
     chunks = sched.chunks
     executor = (
         ThreadPoolExecutor(max_workers=1, thread_name_prefix="wash-stage")
-        if async_staging and len(chunks) > 1 else None
+        if resolve_async_staging(async_staging, chunks) and len(chunks) > 1
+        else None
     )
 
     t0 = time.time()

@@ -190,6 +190,148 @@ def test_oversized_request_rejected_at_submit():
 
 
 # ---------------------------------------------------------------------------
+# prefill-only retirement, same-step dedup, chunked geometry
+# ---------------------------------------------------------------------------
+
+
+def test_max_new_one_retires_at_prefill():
+    """max_new=1: the prefill program's sampled token completes the
+    request, so it must retire WITHOUT ever occupying the decode batch
+    (a decode dispatch for it would read an uninitialized slot)."""
+    params = _params()
+    rng = np.random.default_rng(9)
+    reqs = [batching.Request(i, rng.integers(0, 50, (s,)).astype(np.int32), 1)
+            for i, s in enumerate([7, 4])]
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=16)
+    out = server.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(_reference(params, r), out[r.uid].tokens)
+    assert server.stats["decode_steps"] == 0
+    assert server.stats["retired"] == 2
+    assert server._pool.used_count == 0
+
+
+def test_same_step_prefix_dedup():
+    """Two requests sharing a prompt prefix, admitted by the SAME step()
+    call: the first admission's prefill registers its page digests before
+    the second admission runs, so the second must share, not recompute."""
+    params = _params()
+    rng = np.random.default_rng(10)
+    shared = rng.integers(0, 50, (8,)).astype(np.int32)
+    a = np.concatenate([shared, rng.integers(0, 50, (3,)).astype(np.int32)])
+    b = np.concatenate([shared, rng.integers(0, 50, (5,)).astype(np.int32)])
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=32)
+    server.submit(batching.Request("a", a, 4))
+    server.submit(batching.Request("b", b, 4))
+    server.step()  # one step admits BOTH (two free slots)
+    assert server.stats["admitted"] == 2
+    assert server.stats["pages_shared"] == 2  # the 8-token prefix = 2 pages
+    assert server.stats["prefix_tokens_reused"] == 8
+    out = server.run()
+    for uid, prompt in (("a", a), ("b", b)):
+        np.testing.assert_array_equal(
+            _reference(params, batching.Request(uid, prompt, 4)),
+            out[uid].tokens)
+
+
+def test_chunked_prefill_same_tokens_fewer_trace_shapes():
+    """prefill_chunk splits every admission into fixed-size chunk
+    programs: tokens stay bitwise identical and the compiled prefill
+    shapes collapse to {chunk, remainders} instead of one per prompt
+    length."""
+    params = _params()
+    reqs = _mixed_requests(seed=11)
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=3, num_pages=32,
+                                       prefill_chunk=4)
+    out = server.run(reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(_reference(params, r), out[r.uid].tokens)
+    assert batching.decode_trace_count() == 1
+    # chunk lengths are min(4, remaining): {4} plus short remainders —
+    # never more shapes than the chunk size
+    assert batching.prefill_trace_count() <= 4
+
+
+# ---------------------------------------------------------------------------
+# LRU retention: revival, eviction under pressure, stall recovery
+# ---------------------------------------------------------------------------
+
+
+def test_lru_retention_revives_prefix_pages():
+    """retain_pages: a drained request's hashed pages park on the LRU
+    list; resubmitting the same prompt revives them and prefills ONLY
+    the uncached suffix (token accounting by the server's counters)."""
+    params = _params()
+    rng = np.random.default_rng(12)
+    prompt = rng.integers(0, 50, (11,)).astype(np.int32)
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=32,
+                                       retain_pages=True)
+    out1 = server.run([batching.Request("r1", prompt, 4)])
+    assert server._pool.retained_count > 0
+    assert not server._pool.refcount
+    before = dict(server.stats)
+    out2 = server.run([batching.Request("r2", prompt, 4)])
+    np.testing.assert_array_equal(out1["r1"].tokens, out2["r2"].tokens)
+    assert server.stats["lru_hits"] > 0
+    # 11 tokens at page_size=4: 2 full prompt pages (8 tokens) are
+    # cacheable; the resubmission prefills only the 3-token suffix
+    assert server.stats["prefix_tokens_reused"] - before["prefix_tokens_reused"] == 8
+    assert server.stats["prefill_tokens"] - before["prefill_tokens"] == 3
+    # three-state invariant: every page is free, parked, or referenced
+    pool = server._pool
+    assert (pool.free_count + pool.retained_count + len(pool.refcount)
+            == server.num_pages - 1)
+
+
+def test_lru_eviction_recovers_from_full_parked_pool():
+    """A pool whose idle pages are all parked must evict LRU-first to
+    admit fresh prompts — retention never causes an admission stall."""
+    params = _params()
+    rng = np.random.default_rng(13)
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=8,
+                                       retain_pages=True)
+    for i in range(4):  # distinct prompts, enough to cycle the tiny pool
+        prompt = rng.integers(0, 50, (9,)).astype(np.int32)
+        out = server.run([batching.Request(i, prompt, 3)])
+        np.testing.assert_array_equal(
+            _reference(params, batching.Request(i, prompt, 3)),
+            out[i].tokens)
+    assert server.stats["lru_evictions"] > 0
+    pool = server._pool
+    assert (pool.free_count + pool.retained_count + len(pool.refcount)
+            == server.num_pages - 1)
+    assert not pool.refcount
+
+
+def test_cancel_releases_pages_at_every_stage():
+    """cancel() drops a request whether queued or decoding; its pages
+    return to the pool and the stream's other requests are unaffected."""
+    params = _params()
+    rng = np.random.default_rng(14)
+    keep = batching.Request("keep", rng.integers(0, 50, (6,)).astype(np.int32), 5)
+    dec = batching.Request("dec", rng.integers(0, 50, (9,)).astype(np.int32), 8)
+    queued = batching.Request("q", rng.integers(0, 50, (5,)).astype(np.int32), 4)
+    server = batching.ContinuousServer(params, CFG, page_size=4,
+                                       max_slots=2, num_pages=32)
+    server.submit(keep)
+    server.submit(dec)
+    server.submit(queued)
+    server.step()  # admits keep + dec (2 slots); q stays queued
+    assert server.cancel("q") and server.cancel("dec")
+    assert not server.cancel("nope")
+    out = server.run()
+    assert set(out) == {"keep"}
+    np.testing.assert_array_equal(_reference(params, keep), out["keep"].tokens)
+    assert server.stats["cancelled"] == 2
+    assert server._pool.used_count == 0
+
+
+# ---------------------------------------------------------------------------
 # modes + kernel routing
 # ---------------------------------------------------------------------------
 

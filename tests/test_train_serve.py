@@ -87,6 +87,69 @@ def test_generate_shapes_and_determinism():
     )
 
 
+def test_checkpoint_restore_mid_stream_keeps_page_tables():
+    """checkpoint round-trip while a driver holds a paged population
+    mid-stream: swapping in the restored params must not disturb the
+    in-flight page tables or the tokens — the KV pool and slot state are
+    serving-runtime state, fully independent of the checkpointed
+    weights."""
+    import numpy as np
+
+    from repro.serving import batching
+    from repro.serving import engine as serving_engine
+    from repro.serving.driver import RequestDriver
+    from repro.train import checkpoint
+
+    cfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
+                      d_ff=64, vocab_size=50, dtype="float32")
+    popn = jax.vmap(lambda k: M.init_params(k, cfg))(jax.random.split(KEY, 3))
+    server = batching.ContinuousServer.from_trained(
+        popn, cfg, mode="ensemble", page_size=4, max_slots=2, num_pages=32,
+        retain_pages=True)
+    driver = RequestDriver(server, prefill_chunk=3)
+    rng = np.random.default_rng(21)
+    reqs = [batching.Request(i, rng.integers(0, 50, (s,)).astype(np.int32), 6)
+            for i, s in enumerate([11, 7])]
+    for r in reqs:
+        driver.submit(r)
+    for _ in range(6):  # mid-stream: chunked prefills and decode under way
+        driver.tick()
+
+    def _page_tables():
+        return ([(pf.uid, list(pf.pages)) for pf in server._prefills]
+                + [(slot.uid, list(slot.pages))
+                   for slot in server._slots if slot is not None])
+
+    tables_before = _page_tables()
+    assert tables_before, "stream must still be in flight for this test"
+
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as d:
+        path = checkpoint.save(f"{d}/popn", popn)
+        like = jax.eval_shape(lambda: jax.vmap(
+            lambda k: M.init_params(k, cfg))(jax.random.split(KEY, 3)))
+        restored = checkpoint.restore(path, like)
+    # the restored stack replaces the served params mid-stream
+    server.params = serving_engine.serving_params(restored, "ensemble")
+
+    assert _page_tables() == tables_before, (
+        "restore disturbed in-flight page tables")
+
+    metrics = driver.drain()
+    for r in reqs:
+        expect = np.asarray(serving_engine.generate(
+            popn, cfg, {"tokens": jnp.asarray(r.tokens)[None]}, r.max_new,
+            mode="ensemble"))[0]
+        np.testing.assert_array_equal(
+            expect, metrics[r.uid].tokens,
+            err_msg=f"uid {r.uid} diverged across the checkpoint swap")
+    pool = server._pool
+    assert not pool.refcount
+    assert (pool.free_count + pool.retained_count + len(pool.refcount)
+            == server.num_pages - 1)
+
+
 def test_generate_vlm_position_offset():
     cfg = ModelConfig(num_layers=2, d_model=32, num_heads=2, num_kv_heads=2,
                       d_ff=64, vocab_size=50, frontend="vision", num_patches=3,

@@ -1,0 +1,74 @@
+#!/usr/bin/env python
+"""CLI help lint: every flag on every launcher must document itself.
+
+Imports each ``repro.launch`` CLI, captures its ``ArgumentParser`` by
+intercepting ``parse_args`` (no training/serving code ever runs), and
+fails if any action is missing a help string — a flag without help is
+invisible in ``--help`` output, which is the only discovery surface the
+launchers have.  Also renders each parser's full ``--help`` text, so a
+formatting crash (bad ``%`` escapes and the like) fails CI here instead
+of in a user's terminal.
+
+Usage:  PYTHONPATH=src python tools/check_cli_help.py
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+
+CLI_MODULES = [
+    "repro.launch.train",
+    "repro.launch.serve",
+    "repro.launch.dryrun",
+]
+
+
+class _Captured(Exception):
+    def __init__(self, parser: argparse.ArgumentParser):
+        self.parser = parser
+
+
+def capture_parser(main) -> argparse.ArgumentParser:
+    """Run ``main([])`` just far enough to grab the parser it builds."""
+    orig = argparse.ArgumentParser.parse_args
+
+    def grab(self, args=None, namespace=None):
+        raise _Captured(self)
+
+    argparse.ArgumentParser.parse_args = grab
+    try:
+        main([])
+    except _Captured as c:
+        return c.parser
+    finally:
+        argparse.ArgumentParser.parse_args = orig
+    raise RuntimeError("main() returned without calling parse_args")
+
+
+def main() -> int:
+    failures = []
+    n_flags = 0
+    for modname in CLI_MODULES:
+        mod = importlib.import_module(modname)
+        parser = capture_parser(mod.main)
+        for action in parser._actions:
+            if isinstance(action, argparse._HelpAction):
+                continue
+            n_flags += 1
+            name = "/".join(action.option_strings) or action.dest
+            if not action.help or not action.help.strip():
+                failures.append(f"{modname}: {name} has no help text")
+        # formatting must not crash (argparse evaluates %-escapes lazily)
+        parser.format_help()
+    if failures:
+        print("\n".join(failures), file=sys.stderr)
+        print(f"\n{len(failures)} undocumented flag(s)", file=sys.stderr)
+        return 1
+    print(f"checked {len(CLI_MODULES)} CLIs, {n_flags} flags documented: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
