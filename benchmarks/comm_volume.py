@@ -139,6 +139,18 @@ def shardlocal_volume(arch_id: str = "llama3.2-3b", base_p: float = 0.05,
     return local, glob, sharded, len(pplan.infos)
 
 
+def pipeline_volume(arch_id: str = "kimi-k2-1t-a32b", stages: int = 4,
+                    n: int = 4):
+    """Per-stage exact WASH accounting on an (ens, pipe) mesh vs the
+    single-stage plan.  Pure host-side shape math (fake mesh, no devices):
+    the per-stage budgets must sum to the pipe-plan's global volume to the
+    last ulp, and never exceed what the single-stage plan moves
+    (``pipeline_report`` asserts both)."""
+    from repro.launch.dryrun import pipeline_report
+
+    return pipeline_report(arch_id, n, stages, mixing_kind="wash")
+
+
 def run(quick: bool = True):
     rows = []
     # 1. analytic Eq. 6 accounting on a real arch config
@@ -161,6 +173,22 @@ def run(quick: bool = True):
              "ratio": local / global_vol if global_vol else None,
              "sharded_leaves": f"{nsharded}/{nleaves}"}),
     ))
+
+    # 1c. per-stage budgets on pipeline meshes (Eq. 6 makes deep stages
+    # cheap: the decreasing schedule concentrates volume in stage 0)
+    for arch_id, stages, n in (("kimi-k2-1t-a32b", 4, 4),
+                               ("internvl2-76b", 8, 2)):
+        rec = pipeline_volume(arch_id, stages=stages, n=n)
+        rows.append((
+            f"table1_pipeline_{arch_id}_s{stages}",
+            0.0,
+            fmt({"per_stage_scalars": [float(v) for v in
+                 rec["per_stage_scalars"]],
+                 "total_scalars": rec["total_scalars"],
+                 "single_stage_scalars": rec["single_stage_scalars"],
+                 "stage0_share": (rec["per_stage_scalars"][0]
+                                  / rec["total_scalars"])}),
+        ))
 
     # 2. measured ppermute volume of the fused shard_map engine (tiny run)
     measured, expected, traces = measured_engine_volume()

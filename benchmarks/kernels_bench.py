@@ -178,6 +178,74 @@ def _staging_and_compile_rows(steps: int = 24):
     ]
 
 
+def _pipeline_rows(steps: int = 16):
+    """Microbatched GPipe engine vs the single-shot fused step on the same
+    toy population.  On this host's mesh (1-device CPU degenerates to
+    S=1), ``microbatches=1`` delegates to the single-stage engine — the
+    baseline — while ``microbatches=M`` pays the M+S-1-tick schedule, so
+    the ratio is the measured bubble + scheduling overhead the pipeline
+    trades for 1/S per-chip memory at scale."""
+    import time as _time
+
+    from jax import lax
+
+    from repro.configs.base import TrainConfig
+    from repro.core.mixing import MixingConfig
+    from repro.train import StageFns, train_population_pipelined
+
+    L, DIN, D, DOUT, B, n = 4, 16, 8, 4, 8, 4
+
+    def init(k):
+        ks = jax.random.split(k, 3)
+        return {"embed": {"w": jax.random.normal(ks[0], (DIN, D)) * 0.3},
+                "blocks": {"w1": jax.random.normal(ks[1], (L, D, D)) * 0.3},
+                "head": {"w": jax.random.normal(ks[2], (D, DOUT)) * 0.3}}
+
+    def embed_fn(p, b):
+        return b["x"] @ p["embed"]["w"]
+
+    def blocks_fn(p, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl) + h, None
+        h, _ = lax.scan(body, x, p["blocks"]["w1"])
+        return h
+
+    def head_fn(p, x, b):
+        return jnp.mean((x @ p["head"]["w"] - b["y"]) ** 2)
+
+    def data_fn(m, step, k):
+        kx, ky = jax.random.split(k)
+        return {"x": jax.random.normal(kx, (B, DIN)),
+                "y": jax.random.normal(ky, (B, DOUT))}
+
+    fns = StageFns(embed_fn, blocks_fn, head_fn)
+    tcfg = TrainConfig(population=n, optimizer="sgd", lr=0.05,
+                       total_steps=steps, batch_size=B, seq_len=1, seed=0)
+    mcfg = MixingConfig(kind="wash", base_p=0.1, mode="bucketed")
+    key = jax.random.key(0)
+
+    def run(micro):
+        t0 = _time.time()
+        train_population_pipelined(
+            key, init, fns, data_fn, tcfg, mcfg, L,
+            record_every=max(steps // 2, 1), microbatches=micro)
+        return (_time.time() - t0) * 1e6
+
+    run(1)  # warm dispatch state; each timed run still compiles fresh
+    us_single = run(1)
+    us_micro = run(4)
+    from repro.launch.mesh import make_host_mesh
+    S = int(make_host_mesh(n, "ens_pp").shape["pipe"])
+    return [
+        ("engine_pipelined_single_shot", us_single / steps,
+         fmt({"steps": steps, "microbatches": 1, "stages": S})),
+        ("engine_pipelined_microbatched", us_micro / steps,
+         fmt({"steps": steps, "microbatches": 4, "stages": S,
+              "ticks_per_step": 4 + S - 1,
+              "overhead_vs_single_shot": us_micro / us_single})),
+    ]
+
+
 def _write_json(rows):
     os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
     by_name = {name: {"us_per_call": us, "derived": derived}
@@ -265,6 +333,7 @@ def run(quick: bool = True):
 
     rows.extend(_engine_step_rows(steps=8 if quick else 32))
     rows.extend(_staging_and_compile_rows(steps=24 if quick else 96))
+    rows.extend(_pipeline_rows(steps=8 if quick else 32))
     _write_json(rows)
     return rows
 

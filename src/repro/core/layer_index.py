@@ -95,6 +95,40 @@ def total_layers(num_blocks: int) -> int:
     return num_blocks + 2
 
 
+def stage_layer_bounds(num_blocks: int, num_stages: int):
+    """Contiguous ``[lo, hi)`` block ranges per pipeline stage.
+
+    Near-even split: stage ``s`` owns blocks ``[s*L//S, (s+1)*L//S)``, so
+    uneven layer counts (kimi's 61 blocks over 8 stages) stay legal for the
+    planner's per-stage accounting; the training/serving engines additionally
+    require ``L % S == 0`` so stage shards share one shape.
+    """
+    if num_stages < 1:
+        raise ValueError(f"num_stages must be >= 1, got {num_stages}")
+    return tuple(
+        (s * num_blocks // num_stages, (s + 1) * num_blocks // num_stages)
+        for s in range(num_stages)
+    )
+
+
+def stage_of_depth(depth: int, num_blocks: int, num_stages: int) -> int:
+    """Owner stage of a leaf by its depth index (see :func:`leaf_depth`).
+
+    Depth 0 (embeddings) lives on stage 0; depth ``num_blocks + 1`` (final
+    norm / head) on the last stage; block ``b`` (depth ``b + 1``) on the
+    stage whose :func:`stage_layer_bounds` range contains it.
+    """
+    if depth <= 0:
+        return 0
+    if depth >= num_blocks + 1:
+        return num_stages - 1
+    b = depth - 1
+    for s, (lo, hi) in enumerate(stage_layer_bounds(num_blocks, num_stages)):
+        if lo <= b < hi:
+            return s
+    return num_stages - 1  # pragma: no cover - bounds always tile [0, L)
+
+
 def depth_histogram(params: PyTree, num_blocks: int) -> dict:
     """Diagnostic: scalar count per depth (used by comm-volume accounting)."""
     flat, _ = jax.tree_util.tree_flatten_with_path(params)

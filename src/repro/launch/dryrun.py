@@ -349,6 +349,68 @@ def _compile_inner(cfg, shape, mesh, wash, mixing_kind, chips, params_sds, pspec
 
 
 # ---------------------------------------------------------------------------
+# planner-only pipeline accounting (no devices, no compile)
+# ---------------------------------------------------------------------------
+
+
+def pipeline_report(arch_id: str, population: int, stages: int,
+                    mixing_kind: str = "wash") -> dict:
+    """Per-stage WASH comm for ``arch`` on an (ens, data, pipe) mesh.
+
+    Runs the :mod:`repro.core.shardplan` planner on a *fake* mesh object —
+    axis names + sizes are all it reads — so full-scale stage budgets
+    (kimi 61 layers, internvl 80) come out of a laptop process with no
+    devices and no compile.  Asserts the refactor's accounting contract:
+    the per-stage volumes sum exactly to the pipeline plan's global, which
+    never exceeds the single-stage plan's.
+    """
+    from types import SimpleNamespace
+
+    from repro.core import shardplan
+
+    cfg = get_arch(arch_id)
+    params_sds = params_shapes(cfg)
+    lids = infer_layer_ids(params_sds, cfg.num_layers)
+    tl = total_layers(cfg.num_layers)
+    member_specs = jax.tree_util.tree_map(lambda _: P(), params_sds)
+    mcfg = MixingConfig(kind=mixing_kind, base_p=0.05, mode="bucketed")
+
+    mesh = SimpleNamespace(
+        axis_names=("ens", "data", "pipe"),
+        shape={"ens": population, "data": 1, "pipe": stages},
+    )
+    staged_specs = rules.stage_member_specs(member_specs, lids, "pipe")
+    pplan = shardplan.plan_population_mixing(
+        mesh, params_sds, staged_specs, mcfg, lids, tl, population
+    )
+    per_stage = [
+        shardplan.static_stage_mix_comm(pplan, s) for s in range(stages)
+    ]
+    total = shardplan.static_shard_mix_comm(pplan)
+
+    mesh1 = SimpleNamespace(
+        axis_names=("ens", "data"), shape={"ens": population, "data": 1}
+    )
+    plan1 = shardplan.plan_population_mixing(
+        mesh1, params_sds, member_specs, mcfg, lids, tl, population
+    )
+    single = shardplan.static_shard_mix_comm(plan1)
+
+    assert sum(per_stage) == total, (per_stage, total)
+    assert total <= single + 1e-6, (total, single)
+    return {
+        "arch": arch_id,
+        "population": population,
+        "stages": stages,
+        "mixing": mixing_kind,
+        "num_layers": cfg.num_layers,
+        "per_stage_scalars": per_stage,
+        "total_scalars": total,
+        "single_stage_scalars": single,
+    }
+
+
+# ---------------------------------------------------------------------------
 # per-pair orchestration
 # ---------------------------------------------------------------------------
 
@@ -467,6 +529,12 @@ def main(argv=None):
     ap.add_argument("--full-unroll", action="store_true",
                     help="unroll all layers instead of the depth-1/depth-2 "
                          "extrapolation (slow; exact for WASH traffic)")
+    ap.add_argument("--pp-stages", type=int, default=0,
+                    help="planner-only pipeline report: partition --arch's "
+                         "WASH plan into this many stages on a fake "
+                         "(ens, data, pipe) mesh and print per-stage comm "
+                         "(population = --wash, default 4; no devices, no "
+                         "compile)")
     ap.add_argument("--all", action="store_true",
                     help="sweep every (arch x shape) pair")
     ap.add_argument("--out-dir", default="benchmarks/dryrun",
@@ -483,6 +551,21 @@ def main(argv=None):
                     help="enable in-model GSPMD sharding constraints")
     ap.add_argument("--tag", default=None, help="suffix for the output file")
     args = ap.parse_args(argv)
+
+    if args.pp_stages:
+        if not args.arch:
+            ap.error("--pp-stages needs --arch")
+        base = args.mixing[:-6] if args.mixing.endswith("_local") else args.mixing
+        rec = pipeline_report(args.arch, args.wash or 4, args.pp_stages, base)
+        stages_str = " ".join(
+            f"s{i}={v:.3e}" for i, v in enumerate(rec["per_stage_scalars"])
+        )
+        print(f"[pipeline] {rec['arch']} N={rec['population']} "
+              f"S={rec['stages']} L={rec['num_layers']}: {stages_str}")
+        print(f"[pipeline] total={rec['total_scalars']:.6e} "
+              f"(= sum of stages) vs single-stage "
+              f"{rec['single_stage_scalars']:.6e}")
+        sys.exit(0)
 
     overrides = {}
     if args.attn_impl:

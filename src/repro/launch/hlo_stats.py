@@ -95,6 +95,30 @@ def _crosses(line: str, boundary: int) -> bool:
     return False
 
 
+def collective_permute_pairs(hlo_text: str):
+    """``source_target_pairs`` of every collective-permute in the module,
+    as a list of per-op ``[(src, tgt), ...]`` lists.
+
+    Tests use this to assert *where* permutes run, not just how many bytes
+    they move — e.g. the pipeline engine's contract that every ens-ring
+    hop stays inside one stage (``src % S == tgt % S`` on an (ens, pipe)
+    mesh) and stage-boundary hops move exactly one stage forward."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "collective-permute" not in line or "-done(" in line:
+            continue
+        m = _PAIR_RE.search(line)
+        if not m:
+            continue
+        ids = [
+            int(x)
+            for x in m.group(1).replace("{", " ").replace("}", " ")
+            .replace(",", " ").split()
+        ]
+        out.append(list(zip(ids[::2], ids[1::2])))
+    return out
+
+
 def collective_bytes(hlo_text: str, pod_boundary: int = 0) -> Dict[str, int]:
     """Per-collective-kind result bytes summed over the module.
 

@@ -20,6 +20,11 @@ def _mk(shape, axes):
     return make_mesh(shape, axes)
 
 
+def _largest_divisor(x: int, cap: int) -> int:
+    """Largest divisor of ``x`` that is <= ``cap`` (>= 1)."""
+    return max(s for s in range(1, max(min(x, cap), 1) + 1) if x % s == 0)
+
+
 def make_host_ensemble_mesh(population: int):
     """Ens-only mesh over this host's actual devices (fused-engine default).
 
@@ -27,41 +32,93 @@ def make_host_ensemble_mesh(population: int):
     otherwise the largest divisor of the population that fits (1-device CPU
     fallback: the whole population is one shard_map block and every
     ppermute degenerates to a local roll)."""
-    ndev = len(jax.devices())
-    size = max(
-        s for s in range(1, min(population, ndev) + 1) if population % s == 0
-    )
-    return _mk((size,), ("ens",))
+    return _mk((_largest_divisor(population, len(jax.devices())),), ("ens",))
 
 
-def make_host_mesh(population: int, kind: str = "ens"):
+HOST_MESH_AXES = {
+    "ens": ("ens",),
+    "ens_dp": ("ens", "data"),
+    "ens_dp_mp": ("ens", "data", "model"),
+    "ens_pp": ("ens", "pipe"),
+    "ens_dp_pp": ("ens", "data", "pipe"),
+}
+
+
+def make_host_mesh(
+    population: int,
+    kind: str = "ens",
+    *,
+    mesh_shape=None,
+    pp_stages: int = None,
+):
     """Host-device-count-clamped multi-axis mesh for the fused engine.
 
       ens        (E,)        — the existing ens-only default
       ens_dp     (E, D)      — population + data axes
       ens_dp_mp  (E, D, M)   — population + data + model axes
+      ens_pp     (E, S)      — population + pipeline-stage axes
+      ens_dp_pp  (E, D, S)   — population + data + pipeline-stage axes
 
-    E is the largest divisor of the population that fits the host (as in
-    :func:`make_host_ensemble_mesh`); the remaining devices fill the model
-    axis (2 when it divides, for ``ens_dp_mp``) then the data axis.  Axes
-    are never padded past the host's device count, so the constructors are
-    safe on any CPU/TPU host; a 1-device host degenerates every kind to
-    the (1,)/(1,1)/(1,1,1) mesh.
+    Automatic fill: E is the largest divisor of the population that fits
+    the host (as in :func:`make_host_ensemble_mesh`); for ``ens_pp``/
+    ``ens_dp_pp`` the pipe axis takes ``pp_stages`` (which must divide the
+    remaining devices; default 1); the model axis takes the largest
+    divisor of what is left (replacing the old hard-coded 2-or-1 fill);
+    the data axis absorbs the remainder.  Axes are never padded past the
+    host's device count, so a 1-device host degenerates every kind to the
+    all-ones mesh.
+
+    ``mesh_shape`` overrides the fill entirely: a tuple matching the
+    kind's axes exactly (e.g. ``(2, 2, 2)`` for ``ens_dp_mp``), validated
+    against the host's device count with a clear error when it does not
+    divide.
     """
+    if kind not in HOST_MESH_AXES:
+        raise ValueError(f"unknown host mesh kind {kind!r}")
+    axes = HOST_MESH_AXES[kind]
+    ndev = len(jax.devices())
+    if mesh_shape is not None:
+        shape = tuple(int(s) for s in mesh_shape)
+        if len(shape) != len(axes) or any(s < 1 for s in shape):
+            raise ValueError(
+                f"mesh shape {shape} does not match mesh kind {kind!r} "
+                f"(axes {axes}: need {len(axes)} sizes >= 1)"
+            )
+        total = 1
+        for s in shape:
+            total *= s
+        if ndev % total:
+            raise ValueError(
+                f"mesh shape {shape} needs {total} devices, which does not "
+                f"divide this host's {ndev}"
+            )
+        if population % shape[0]:
+            raise ValueError(
+                f"population {population} must divide over ens axis of "
+                f"size {shape[0]}"
+            )
+        return _mk(shape, axes)
     if kind == "ens":
         return make_host_ensemble_mesh(population)
-    if kind not in ("ens_dp", "ens_dp_mp"):
-        raise ValueError(f"unknown host mesh kind {kind!r}")
-    ndev = len(jax.devices())
-    e = max(
-        s for s in range(1, min(population, ndev) + 1) if population % s == 0
-    )
+    e = _largest_divisor(population, ndev)
     rest = ndev // e
-    m = 2 if kind == "ens_dp_mp" and rest % 2 == 0 else 1
-    d = rest // m
-    shape = (e, d) if kind == "ens_dp" else (e, d, m)
-    axes = ("ens", "data") if kind == "ens_dp" else ("ens", "data", "model")
-    return _mk(shape, axes)
+    sizes = {"ens": e}
+    if "pipe" in axes:
+        s = 1 if pp_stages is None else int(pp_stages)
+        if s < 1 or rest % s:
+            raise ValueError(
+                f"pp_stages={s} must divide the {rest} devices left after "
+                f"ens={e} (host has {ndev} devices); pass mesh_shape for "
+                f"an explicit layout"
+            )
+        sizes["pipe"] = s
+        rest //= s
+    if "model" in axes:
+        sizes["model"] = _largest_divisor(rest, rest)
+        rest //= sizes["model"]
+    if "data" in axes:
+        sizes["data"] = rest
+    return _mk(tuple(sizes[a] for a in axes), axes)
 
 
 def make_host_data_mesh():

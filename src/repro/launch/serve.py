@@ -247,6 +247,11 @@ def main(argv=None):
                     help="data: shard the request batch over every host "
                          "device (launch.mesh.make_host_data_mesh); static "
                          "engine only")
+    ap.add_argument("--pp-stages", type=int, default=0,
+                    help="stage-split decode over this many pipeline stages "
+                         "on a (pipe,) mesh: blocks + KV cache sliced 1/S "
+                         "per chip, bitwise-identical tokens; static engine "
+                         "only, attn families, num_layers %% S == 0")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature; 0 = greedy (keyless)")
     ap.add_argument("--max-new", type=int, default=32,
@@ -308,14 +313,16 @@ def main(argv=None):
     popn = _population(args, cfg, key)
 
     if args.driver:
-        if args.mesh != "none":
-            ap.error("--driver does not take --mesh (single-host runtime)")
+        if args.mesh != "none" or args.pp_stages:
+            ap.error("--driver does not take --mesh/--pp-stages "
+                     "(single-host runtime)")
         _serve_driver(popn, cfg, args)
         return
 
     if args.continuous:
-        if args.mesh != "none":
-            ap.error("--continuous does not take --mesh (single-host runtime)")
+        if args.mesh != "none" or args.pp_stages:
+            ap.error("--continuous does not take --mesh/--pp-stages "
+                     "(single-host runtime)")
         _serve_continuous(popn, cfg, args)
         return
 
@@ -323,7 +330,17 @@ def main(argv=None):
                            args.batch_size, args.seq_len)
 
     mesh = None
-    if args.mesh == "data":
+    if args.pp_stages:
+        if args.mesh != "none":
+            ap.error("--pp-stages builds its own (pipe,) mesh; drop --mesh")
+        from repro.core.compat import make_mesh
+
+        if args.pp_stages < 1 or args.pp_stages > len(jax.devices()):
+            ap.error(f"--pp-stages {args.pp_stages} needs that many "
+                     f"devices; this host has {len(jax.devices())}")
+        mesh = make_mesh((args.pp_stages,), ("pipe",))
+        print(f"mesh: {dict(mesh.shape)}")
+    elif args.mesh == "data":
         from repro.launch.mesh import make_host_data_mesh
 
         mesh = make_host_data_mesh()

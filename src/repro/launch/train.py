@@ -80,12 +80,28 @@ def main(argv=None):
                          "window instead of splitting no-mix gate runs onto "
                          "the collective-free executable")
     ap.add_argument("--mesh", default="ens",
-                    choices=["ens", "ens_dp", "ens_dp_mp"],
+                    choices=["ens", "ens_dp", "ens_dp_mp", "ens_pp",
+                             "ens_dp_pp"],
                     help="shard_map engine: host mesh layout (ens-only, "
                          "ens+data, or ens+data+model; clamped to the "
                          "host's device count).  ens_dp_mp also shards "
                          "params via repro.sharding.rules and mixes with "
-                         "shard-local plans (core.shardplan)")
+                         "shard-local plans (core.shardplan).  ens_pp/"
+                         "ens_dp_pp add a pipeline-stage axis and route "
+                         "through the microbatched pipelined engine")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="explicit comma-separated axis sizes matching the "
+                         "--mesh kind's axes (e.g. 2,2,2 for ens_dp_mp, "
+                         "2,4 for ens_pp) instead of the automatic fill; "
+                         "must divide the host's device count")
+    ap.add_argument("--pp-stages", type=int, default=None,
+                    help="pipeline stages S for --mesh ens_pp/ens_dp_pp "
+                         "(default 1; must divide the devices left after "
+                         "the ens axis and the model's layer count)")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="pipelined engine: microbatches M per optimizer "
+                         "step (GPipe schedule of M+S-1 ticks; must divide "
+                         "--batch-size)")
     ap.add_argument("--pallas-shuffle", action="store_true",
                     help="apply bucketed shuffles through the fused Pallas "
                          "kernel (kernels.wash_shuffle; interpret mode "
@@ -145,6 +161,18 @@ def main(argv=None):
     if args.pallas_shuffle and mcfg.mode == "dense":
         ap.error("--pallas-shuffle fuses bucketed applies; use --mode bucketed")
 
+    pipelined = args.mesh in ("ens_pp", "ens_dp_pp")
+    if (args.pp_stages is not None or args.microbatches > 1) and not pipelined:
+        ap.error("--pp-stages/--microbatches require --mesh ens_pp or "
+                 "ens_dp_pp")
+    mesh_shape = None
+    if args.mesh_shape is not None:
+        try:
+            mesh_shape = tuple(int(x) for x in args.mesh_shape.split(","))
+        except ValueError:
+            ap.error(f"--mesh-shape {args.mesh_shape!r} is not a "
+                     "comma-separated list of integers")
+
     engine_opts = None
     mesh = None
     if args.engine == "shard_map":
@@ -154,10 +182,12 @@ def main(argv=None):
             "split_gate_runs": not args.no_gate_split,
             "pallas_shuffle": args.pallas_shuffle,
         }
-        if args.mesh != "ens":
+        if args.mesh != "ens" or mesh_shape is not None:
             from repro.launch.mesh import make_host_mesh
 
-            mesh = make_host_mesh(args.population, args.mesh)
+            mesh = make_host_mesh(args.population, args.mesh,
+                                  mesh_shape=mesh_shape,
+                                  pp_stages=args.pp_stages)
             if "model" in mesh.axis_names and mesh.shape["model"] > 1:
                 from repro.sharding import rules
 
@@ -168,20 +198,34 @@ def main(argv=None):
                     params_sds, cfg, mesh
                 )
             print(f"mesh: {dict(mesh.shape)}")
-    elif args.sync_staging or args.no_gate_split or args.mesh != "ens":
-        ap.error("--sync-staging/--no-gate-split/--mesh require "
-                 "--engine shard_map")
+    elif (args.sync_staging or args.no_gate_split or args.mesh != "ens"
+          or mesh_shape is not None):
+        ap.error("--sync-staging/--no-gate-split/--mesh/--mesh-shape "
+                 "require --engine shard_map")
     if args.record_every is not None and args.record_every < 1:
         ap.error("--record-every must be >= 1")
     record_every = (
         args.record_every if args.record_every is not None
         else max(args.steps // 10, 1)
     )
-    res = train_population(
-        key, lambda k: M.init_params(k, cfg), loss_fn, data_fn,
-        tcfg, mcfg, cfg.num_layers, record_every=record_every,
-        engine=args.engine, mesh=mesh, engine_opts=engine_opts,
-    )
+    if pipelined:
+        from repro.train import StageFns, train_population_pipelined
+
+        res = train_population_pipelined(
+            key, lambda k: M.init_params(k, cfg),
+            StageFns(*M.pipeline_stage_fns(cfg)), data_fn,
+            tcfg, mcfg, cfg.num_layers, record_every=record_every,
+            mesh=mesh, microbatches=args.microbatches,
+            async_staging=engine_opts["async_staging"],
+            split_gate_runs=engine_opts["split_gate_runs"],
+            pallas_shuffle=engine_opts["pallas_shuffle"],
+        )
+    else:
+        res = train_population(
+            key, lambda k: M.init_params(k, cfg), loss_fn, data_fn,
+            tcfg, mcfg, cfg.num_layers, record_every=record_every,
+            engine=args.engine, mesh=mesh, engine_opts=engine_opts,
+        )
 
     soup = averaged_params(res)
     print(f"arch={cfg.name} mixing={args.mixing} steps={args.steps} "

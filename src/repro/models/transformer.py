@@ -266,6 +266,57 @@ def loss_fn(params, cfg: ModelConfig, batch) -> Tuple[jax.Array, Dict[str, jax.A
     return total, {"nll": loss, "aux": aux}
 
 
+def pipeline_supported(cfg: ModelConfig) -> Optional[str]:
+    """None if the pipelined training engine can stage-split this config,
+    else the reason.  The stage boundary carries ONE activation tensor, so
+    anything with extra cross-block state (SSM/hybrid recurrences, the
+    encoder output of enc-dec, modality prefixes) or a cross-stage loss
+    term (the MoE router aux, summed over *all* layers) is rejected loudly
+    rather than trained wrong."""
+    if cfg.block_kind != "attn":
+        return f"block_kind={cfg.block_kind!r} carries state across blocks"
+    if cfg.is_encdec:
+        return "encoder-decoder needs the encoder output on every stage"
+    if cfg.frontend is not None:
+        return f"frontend={cfg.frontend!r} prefixes are not stage-split"
+    if cfg.moe:
+        return "MoE router aux loss is not accumulated across stages"
+    return None
+
+
+def pipeline_stage_fns(cfg: ModelConfig):
+    """(embed, blocks, head) callables for
+    :func:`repro.train.engine.train_population_pipelined` (its
+    ``StageFns``).  ``blocks`` scans whatever slice of ``params["blocks"]``
+    the engine hands it, so the same function serves every stage.  The
+    composition ``head(blocks(embed(..)))`` equals :func:`loss_fn`'s nll
+    for the supported (attn, non-MoE) families."""
+    reason = pipeline_supported(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"pipelined training: {reason}")
+
+    def embed(params, batch):
+        return _embed_tokens(params, cfg, batch["tokens"])
+
+    def blocks(params, x):
+        def body(h, block_l):
+            h, _, _ = _block_train(block_l, cfg, h, None)
+            return h, None
+
+        if cfg.remat_blocks:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, x, params["blocks"], unroll=cfg.scan_unroll)
+        return x
+
+    def head(params, x, batch):
+        logits = _logits(params, cfg, x)
+        targets = batch["tokens"][:, 1:]
+        lp = jax.nn.log_softmax(logits[:, :-1].astype(jnp.float32), axis=-1)
+        return jnp.mean(-jnp.take_along_axis(lp, targets[..., None], axis=-1)[..., 0])
+
+    return embed, blocks, head
+
+
 # ---------------------------------------------------------------------------
 # public API: serving (prefill + one-token decode)
 # ---------------------------------------------------------------------------
@@ -347,6 +398,91 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, pos):
 
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache), unroll=cfg.scan_unroll)
     return _logits(params, cfg, x), new_cache
+
+
+def staged_decode_supported(cfg: ModelConfig) -> Optional[str]:
+    """None if the stage-split (pipeline) serving path can serve this
+    config, else the reason.
+
+    Stage-split decode slices ``params["blocks"]`` (and the layer-leading
+    KV cache) over a ``pipe`` mesh axis and moves the activation between
+    stages with ``ppermute``.  That only composes cleanly for the plain
+    attention families whose entire decode state is the layer-stacked KV
+    ring: SSM/hybrid recurrent state and the encoder-decoder cross cache
+    carry extra per-layer leaves the staged cache plumbing does not split,
+    and modality prefixes (vision patches) make the prefill embedding
+    stage-dependent.  All rejected loudly rather than served wrong."""
+    if cfg.block_kind != "attn":
+        return f"block_kind={cfg.block_kind!r} state is not stage-split"
+    if cfg.is_encdec:
+        return "encoder-decoder cross-attention cache is not stage-split"
+    if cfg.frontend is not None:
+        return f"frontend={cfg.frontend!r} prefixes are not stage-split"
+    return None
+
+
+def decode_embed(params, cfg: ModelConfig, tokens, pos):
+    """The embedding half of :func:`decode_step` (staged serving runs it on
+    every stage — embed params are pipe-replicated, so all stages agree)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if cfg.pos_kind == "learned":
+        return _embed_tokens(params, cfg, tokens, pos0=pos)
+    return params["embed"]["tok"][tokens]
+
+
+def decode_blocks(blocks, cfg: ModelConfig, x, cache, pos):
+    """One-token decode through a contiguous slice of blocks.
+
+    ``blocks``/``cache`` hold ``cfg.num_layers`` layers — the staged
+    serving engine passes its per-stage slice with a ``num_layers``-patched
+    config.  Scanning a slice composes bitwise with scanning the full
+    stack, which is what the staged-vs-unstaged parity contract rests on.
+    Returns ``(x, new_cache)``."""
+    pos = jnp.asarray(pos, jnp.int32)
+
+    def body(h, xs):
+        block_l, cache_l = xs
+        h, new_cache_l = _block_decode(block_l, cfg, h, cache_l, pos)
+        return h, new_cache_l
+
+    return jax.lax.scan(body, x, (blocks, cache), unroll=cfg.scan_unroll)
+
+
+def prefill_embed(params, cfg: ModelConfig, batch):
+    """Prompt embedding for the staged prefill (attn-only families — the
+    vision/audio prefixes are rejected by :func:`staged_decode_supported`)."""
+    return _embed_tokens(params, cfg, batch["tokens"])
+
+
+def prefill_blocks(blocks, cfg: ModelConfig, x, cache):
+    """Full-prompt prefill through a contiguous slice of blocks.
+
+    Per-layer ops are the exact sequence of :func:`prefill`'s scan body
+    restricted to the attn families, so stage-slicing preserves bitwise
+    parity with the single-scan prefill.  Returns ``(x, new_cache)``."""
+
+    def body(h, xs):
+        block_l, cache_l = xs
+        new_cache_l = dict(cache_l)
+        a_in = L.rmsnorm(block_l["ln1"], h, cfg.norm_eps)
+        if cfg.mla:
+            a, new_cache_l["kv"] = L.mla_prefill(
+                block_l["attn"], cfg, a_in, cache_l["kv"])
+        else:
+            a, new_cache_l["kv"] = L.gqa_prefill(
+                block_l["attn"], cfg, a_in, cache_l["kv"])
+        h = h + a
+        y, _ = _mlp_apply(block_l["mlp"], cfg,
+                          L.rmsnorm(block_l["ln2"], h, cfg.norm_eps))
+        return h + y, new_cache_l
+
+    return jax.lax.scan(body, x, (blocks, cache), unroll=cfg.scan_unroll)
+
+
+def lm_logits(params, cfg: ModelConfig, x):
+    """Final-norm + LM head (public alias of the private ``_logits`` for
+    the staged serving engine, which runs the head on the last stage)."""
+    return _logits(params, cfg, x)
 
 
 def paged_decode_supported(cfg: ModelConfig) -> Optional[str]:

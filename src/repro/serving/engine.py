@@ -8,8 +8,9 @@ list concat.  The engine here compiles the whole generation once:
 
   * prefill and decode are jitted top-level programs cached in a
     module-level **executable cache** keyed on
-    ``(cfg, mode, B, S, max_new, capacity, greedy, mesh)`` — one trace per
-    shape for the lifetime of the process, reused across requests;
+    ``(cfg, mode, B, S, max_new, capacity, greedy, mesh, stages)`` — one
+    trace per shape for the lifetime of the process, reused across
+    requests;
   * decode runs as a single ``lax.scan`` over token positions
     (:func:`repro.models.transformer.decode_scan`) with ``pos`` traced and
     the ``(B, S+max_new)`` token buffer preallocated and filled in-program;
@@ -38,6 +39,19 @@ Batch sharding: pass a ``mesh`` with a ``data`` axis (e.g.
 the data axes while params replicate — serving scales past one chip
 without touching the program.
 
+**Stage-split decode**: pass a ``("pipe",)`` mesh (``--pp-stages`` on the
+serve CLI) and ``params["blocks"]`` plus the layer-leading KV cache are
+sliced over ``pipe`` into ``S`` contiguous stages.  Each decode step runs
+``S`` hops: every stage applies its local ``L/S`` blocks, the activation
+crosses the stage boundary via ``ppermute``, and the last stage's logits
+are ``psum``-broadcast so all stages sample the same token — staged
+output is bitwise-identical to the unstaged engine (pure data movement).
+Per-chip FLOPs match the replicated engine (``S`` hops x ``L/S`` layers);
+the win is *memory* — each chip holds ``1/S`` of the blocks and cache, so
+a model (or capacity) that does not fit one chip serves on ``S``.
+:func:`repro.models.transformer.staged_decode_supported` gates the path
+to the plain attention families (GQA/MLA); ensemble mode is rejected.
+
 Handles the position bookkeeping for multimodal prefixes (VLM patches are
 part of the internal sequence, so decode positions are offset by
 ``num_patches``).
@@ -45,6 +59,7 @@ part of the internal sequence, so decode positions are offset by
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -53,7 +68,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.core import averaging
-from repro.core.compat import donate_argnums
+from repro.core.compat import donate_argnums, shard_map
 from repro.core import population as pop
 from repro.models import transformer as M
 
@@ -207,19 +222,186 @@ def _build_decode(cfg: ModelConfig, ensemble: bool, S: int, max_new: int,
     return jax.jit(program, donate_argnums=_donate((2,)))
 
 
+# ---------------------------------------------------------------------------
+# stage-split programs (pipeline serving over a ("pipe",) mesh)
+# ---------------------------------------------------------------------------
+
+
+def _staged_param_specs(params) -> PyTree:
+    """Member-param specs for the pipe mesh: stacked ``blocks`` leaves are
+    stage-sliced on the scanned layer axis, everything else replicates."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [
+        P("pipe") if any(getattr(p, "key", None) == "blocks" for p in path)
+        else P()
+        for path, _ in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def _staged_cache_specs(cfg: ModelConfig, stages: int, B: int, capacity: int):
+    """(local_cfg, cache pspecs): every cache leaf leads with the layer
+    axis, so the per-stage cache is the global one sharded by ``pipe``."""
+    local_cfg = dataclasses.replace(cfg, num_layers=cfg.num_layers // stages)
+    shapes = jax.eval_shape(lambda: M.init_cache(local_cfg, B, capacity))
+    return local_cfg, jax.tree_util.tree_map(lambda _: P("pipe"), shapes)
+
+
+def _staged_step_fn(cfg: ModelConfig, local_cfg: ModelConfig, stages: int):
+    """decode_step over the pipe axis: ``S`` hops of local blocks + a
+    boundary ``ppermute``; the last stage's logits are psum-broadcast so
+    every stage samples the identical token (the psum adds exact zeros, so
+    staged tokens are bitwise the unstaged engine's)."""
+    perm = [(s, s + 1) for s in range(stages - 1)]
+
+    def step_fn(params, cache, tokens, pos):
+        sid = jax.lax.axis_index("pipe")
+        h = M.decode_embed(params, cfg, tokens, pos)
+        y = h
+        for tau in range(stages):
+            y, kv = M.decode_blocks(params["blocks"], local_cfg, h, cache, pos)
+            cache = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(sid == tau, new, old), kv, cache
+            )
+            if tau < stages - 1:
+                h = jax.lax.ppermute(y, "pipe", perm)
+        logits = M.lm_logits(params, cfg, y)
+        return jax.lax.psum(
+            jnp.where(sid == stages - 1, logits, jnp.zeros_like(logits)),
+            "pipe",
+        ), cache
+
+    return step_fn
+
+
+def _build_staged_prefill(cfg: ModelConfig, stages: int, B: int, S: int,
+                          capacity: int, mesh, pspecs):
+    """Staged prefill: same hop structure as the decode step, on the whole
+    prompt.  Only stage ``tau``'s cache write survives hop ``tau``, so the
+    per-stage KV ring ends bitwise-identical to its slice of the unstaged
+    cache.  Every chip runs ``S`` hops of ``L/S`` layers — replicated-
+    prefill FLOPs, ``1/S`` of its memory."""
+    local_cfg, cspecs = _staged_cache_specs(cfg, stages, B, capacity)
+    perm = [(s, s + 1) for s in range(stages - 1)]
+
+    def program(params, batch):
+        _PREFILL_TRACES[0] += 1
+        sid = jax.lax.axis_index("pipe")
+        cache = M.init_cache(local_cfg, batch["tokens"].shape[0], capacity)
+        h = M.prefill_embed(params, cfg, batch)
+        y = h
+        for tau in range(stages):
+            y, kv = M.prefill_blocks(params["blocks"], local_cfg, h, cache)
+            cache = jax.tree_util.tree_map(
+                lambda new, old: jnp.where(sid == tau, new, old), kv, cache
+            )
+            if tau < stages - 1:
+                h = jax.lax.ppermute(y, "pipe", perm)
+        logits = M.lm_logits(params, cfg, y[:, -1:])
+        logits = jax.lax.psum(
+            jnp.where(sid == stages - 1, logits, jnp.zeros_like(logits)),
+            "pipe",
+        )
+        return logits, cache
+
+    bspecs = {"tokens": P()}
+    f = shard_map(
+        program, mesh=mesh, in_specs=(pspecs, bspecs),
+        out_specs=(P(), cspecs), check_vma=False,
+    )
+    return jax.jit(f)
+
+
+def _build_staged_decode(cfg: ModelConfig, stages: int, B: int, S: int,
+                         max_new: int, capacity: int, greedy: bool, mesh,
+                         pspecs):
+    local_cfg, cspecs = _staged_cache_specs(cfg, stages, B, capacity)
+    step_fn = _staged_step_fn(cfg, local_cfg, stages)
+
+    def program(params, tokens, cache, first_logits, keys, temperature):
+        _DECODE_TRACES[0] += 1
+        nxt = _sample(first_logits, keys, 0, temperature, greedy)
+        buf = jnp.zeros((B, S + max_new), jnp.int32)
+        buf = jax.lax.dynamic_update_slice(buf, tokens.astype(jnp.int32), (0, 0))
+        buf = buf.at[:, S].set(nxt)
+        new_toks, _ = M.decode_scan(
+            params, cfg, nxt, cache, S, max_new - 1,
+            lambda lg, i: _sample(lg, keys, i + 1, temperature, greedy),
+            step_fn=step_fn,
+        )
+        return jax.lax.dynamic_update_slice(buf, new_toks, (0, S + 1))
+
+    f = shard_map(
+        program, mesh=mesh,
+        in_specs=(pspecs, P(), cspecs, P(), P(), P()),
+        out_specs=P(), check_vma=False,
+    )
+    return jax.jit(f, donate_argnums=_donate((2,)))
+
+
+def _staged_request(params, cfg: ModelConfig, mode: str, mesh) -> None:
+    """Validate a pipe-mesh request (stage count >= 2)."""
+    names = tuple(getattr(mesh, "axis_names", ()))
+    extra = [a for a in names if a != "pipe" and mesh.shape[a] > 1]
+    if extra:
+        raise ValueError(
+            f"stage-split serving wants a pipe-only mesh; axes {extra} have "
+            "size > 1 (shard the batch on a separate data mesh instead)"
+        )
+    if mode == "ensemble":
+        raise ValueError(
+            "mode='ensemble' is not supported with stage-split decode: the "
+            "vmapped population step and the pipe hops do not compose; "
+            "serve the soup or a member on the pipe mesh"
+        )
+    reason = M.staged_decode_supported(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"staged decode: {reason}")
+    stages = mesh.shape["pipe"]
+    if cfg.num_layers % stages:
+        raise ValueError(
+            f"num_layers={cfg.num_layers} does not split evenly over "
+            f"{stages} pipeline stages"
+        )
+
+
+def _shard_staged_request(params, batch, keys, mesh, pspecs):
+    """Place a staged request: blocks leaves stage-sliced over ``pipe``,
+    batch/keys/other params replicated."""
+    params = jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), params, pspecs
+    )
+    rep = NamedSharding(mesh, P())
+    batch = {k: jax.device_put(v, rep) for k, v in batch.items()}
+    keys = jax.device_put(keys, rep)
+    return params, batch, keys
+
+
 def _programs(cfg: ModelConfig, ensemble: bool, B: int, S: int, max_new: int,
-              capacity: int, greedy: bool, mesh):
+              capacity: int, greedy: bool, mesh, stages: int = 1,
+              params=None):
     """Executable-cache lookup: one (prefill, decode) pair per shape key.
 
     ``cfg`` is a frozen dataclass and ``mesh`` is hashable, so the key is
     exact — a new shape compiles once, every later request with the same
-    key reuses the executable (0 additional traces)."""
-    key = ("serve", cfg, ensemble, B, S, max_new, capacity, greedy, mesh)
+    key reuses the executable (0 additional traces).  ``stages > 1``
+    selects the stage-split program pair (and keys the cache on it)."""
+    key = ("serve", cfg, ensemble, B, S, max_new, capacity, greedy, mesh,
+           stages)
     if key not in _EXEC_CACHE:
-        _EXEC_CACHE[key] = (
-            _build_prefill(cfg, ensemble, capacity),
-            _build_decode(cfg, ensemble, S, max_new, greedy),
-        )
+        if stages > 1:
+            pspecs = _staged_param_specs(params)
+            _EXEC_CACHE[key] = (
+                _build_staged_prefill(cfg, stages, B, S, capacity, mesh,
+                                      pspecs),
+                _build_staged_decode(cfg, stages, B, S, max_new, capacity,
+                                     greedy, mesh, pspecs),
+            )
+        else:
+            _EXEC_CACHE[key] = (
+                _build_prefill(cfg, ensemble, capacity),
+                _build_decode(cfg, ensemble, S, max_new, greedy),
+            )
     return _EXEC_CACHE[key]
 
 
@@ -319,7 +501,10 @@ def generate(
     ``mode="soup"``/``"member"`` serve ``params`` as a single model (the
     two differ only in how the caller picked the params); ``"ensemble"``
     expects a stacked (N, ...) population and averages member logits
-    in-scan.  ``mesh`` (optional) shards the batch over its data axes.
+    in-scan.  ``mesh`` (optional) shards the batch over its data axes —
+    or, with a ``("pipe",)`` mesh, stage-splits the blocks and KV cache
+    over ``mesh.shape["pipe"]`` pipeline stages (bitwise-identical
+    tokens, ``1/S`` the per-chip blocks+cache memory).
     """
     if mode not in MODES:
         raise ValueError(f"unknown serving mode {mode!r}; expected one of {MODES}")
@@ -331,14 +516,25 @@ def generate(
     capacity = internal_prefix(cfg) + S + max_new_tokens
     greedy = temperature <= 0.0
 
+    staged = mesh is not None and "pipe" in tuple(getattr(mesh, "axis_names", ()))
+    stages = mesh.shape["pipe"] if staged else 1
+    if stages > 1:
+        _staged_request(params, cfg, mode, mesh)
+
     keys = _request_keys(key, B, temperature)
-    if mesh is not None:
+    if mesh is not None and stages == 1:
         params, batch, keys = _shard_request(params, batch, keys, cfg, mesh)
         tokens = batch["tokens"]
 
     prefill_fn, decode_fn = _programs(
-        cfg, ensemble, B, S, max_new_tokens, capacity, greedy, mesh
+        cfg, ensemble, B, S, max_new_tokens, capacity, greedy, mesh,
+        stages=stages, params=params,
     )
+    if stages > 1:
+        params, batch, keys = _shard_staged_request(
+            params, batch, keys, mesh, _staged_param_specs(params)
+        )
+        tokens = batch["tokens"]
     logits, cache = prefill_fn(params, batch)
     return decode_fn(params, tokens, cache, logits, keys,
                      jnp.float32(max(temperature, 1e-6)))

@@ -177,7 +177,45 @@ def named(tree_specs: PyTree, mesh) -> PyTree:
 # ---------------------------------------------------------------------------
 
 
-def population_pspecs(member_specs: PyTree, pop_axes=("ens",)) -> PyTree:
+def stage_member_specs(
+    member_specs: PyTree, layer_ids: PyTree, pipe_axis: str = "pipe"
+) -> PyTree:
+    """Stage-shard the member specs for a pipeline mesh.
+
+    Inserts ``pipe_axis`` on the scanned layer axis (dim 0) of every
+    stacked-blocks leaf — identified by an array-valued ``layer_ids`` leaf
+    (:func:`repro.core.layer_index.infer_layer_ids`), *not* by path, so
+    list-of-dicts block models (whose per-block leaves have no layer axis)
+    are left replicated rather than corrupted.  Everything else (embed,
+    head, norms, per-block leaves of unscanned models) stays
+    pipe-replicated; :mod:`repro.core.shardplan` attributes those leaves
+    to an owner stage for accounting.
+    """
+
+    def _one(spec, lid):
+        if isinstance(lid, int):
+            return spec
+        entries = tuple(spec) if spec is not None else ()
+        if entries and entries[0] is not None:
+            raise ValueError(
+                f"scanned layer axis already sharded by {entries[0]!r}; "
+                "cannot also stage-split it"
+            )
+        return P(pipe_axis, *entries[1:])
+
+    return jax.tree_util.tree_map(
+        _one, member_specs, layer_ids,
+        is_leaf=lambda x: x is None or isinstance(x, P),
+    )
+
+
+def population_pspecs(
+    member_specs: PyTree,
+    pop_axes=("ens",),
+    *,
+    layer_ids: PyTree = None,
+    pipe_axis: str = None,
+) -> PyTree:
     """Specs for a stacked population: the leading axis is sharded over the
     population mesh axes, every member dim keeps its member-level spec.
 
@@ -185,8 +223,15 @@ def population_pspecs(member_specs: PyTree, pop_axes=("ens",)) -> PyTree:
     replicates a member within its population shard); ``pop_axes`` is the
     tuple of mesh axes carrying the population (``("ens",)``, or
     ``("ens", "data")`` when the population divides over data too — see
-    :func:`repro.core.shardplan.classify_axes`).
+    :func:`repro.core.shardplan.classify_roles`).  Passing ``pipe_axis``
+    (with the matching ``layer_ids``) first routes the member specs
+    through :func:`stage_member_specs`, emitting stage-sharded specs for
+    pipeline meshes.
     """
+    if pipe_axis is not None:
+        if layer_ids is None:
+            raise ValueError("pipe_axis requires layer_ids")
+        member_specs = stage_member_specs(member_specs, layer_ids, pipe_axis)
     lead = pop_axes[0] if len(pop_axes) == 1 else tuple(pop_axes)
 
     def _one(s):

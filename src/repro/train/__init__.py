@@ -1,9 +1,14 @@
 """Population training loop + checkpointing."""
 
 from repro.train.loop import TrainResult, train_population
-from repro.train.engine import train_population_sharded
+from repro.train.engine import (
+    StageFns,
+    train_population_pipelined,
+    train_population_sharded,
+)
 from repro.train import checkpoint
 
 __all__ = [
-    "train_population", "train_population_sharded", "TrainResult", "checkpoint",
+    "train_population", "train_population_sharded",
+    "train_population_pipelined", "StageFns", "TrainResult", "checkpoint",
 ]

@@ -43,7 +43,7 @@ from __future__ import annotations
 
 import time
 from concurrent.futures import ThreadPoolExecutor
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -71,7 +71,9 @@ from repro.train.schedule import (  # noqa: F401  (re-exported API)
     Schedule,
     build_schedule,
     chunk_ranges,
+    num_pipeline_ticks,
     record_boundaries,
+    split_microbatch_sizes,
 )
 
 PyTree = Any
@@ -269,6 +271,166 @@ def make_fused_chunk_fn(
     return jax.jit(f, donate_argnums=(0, 1) if donate else ())
 
 
+class StageFns(NamedTuple):
+    """The three pieces of a member's loss for the pipelined engine.
+
+    The engine never inspects where the blocks live — stage-splitting is
+    done entirely by the PartitionSpecs
+    (:func:`repro.sharding.rules.stage_member_specs`), so ``blocks``
+    receives the full member params and reads its (stage-local, under
+    ``shard_map``) stacked-blocks leaves itself.
+    """
+
+    embed: Callable[[PyTree, Any], jax.Array]          # (params, batch) -> x
+    blocks: Callable[[PyTree, jax.Array], jax.Array]   # (params, x) -> x
+    head: Callable[[PyTree, jax.Array, Any], jax.Array]  # -> scalar loss
+
+
+def make_pipelined_chunk_fn(
+    mesh,
+    mcfg: MixingConfig,
+    layer_ids: PyTree,
+    tl: int,
+    opt_update: Callable,
+    stage_fns: StageFns,
+    pspec: PyTree,
+    ospec: PyTree,
+    bspecs: PyTree,
+    *,
+    num_micro: int,
+    pplan: shardplan.PopulationPlan,
+    with_mixing: bool = True,
+    donate: bool = True,
+    use_pallas: bool = False,
+):
+    """Pipeline-parallel variant of :func:`make_fused_chunk_fn`.
+
+    One donated jit scanning (microbatched pipelined update → gated
+    collective mix) over a chunk of steps under ``shard_map`` on a mesh
+    with a ``pipe`` axis.  Each step runs a GPipe-style schedule of
+    ``num_micro + S - 1`` ticks inside a ``lax.scan``: at tick ``t``
+    stage ``s`` runs microbatch ``t - s`` through its block slice and
+    ships the boundary activation to stage ``s + 1`` with a single
+    ``ppermute`` over ``pipe``; ticks outside a stage's live window
+    compute masked junk that never reaches the loss.  Reverse-mode AD
+    transposes the ``ppermute`` chain into the backward pipeline
+    automatically, so one ``value_and_grad`` gives exact microbatch-
+    accumulated gradients (mean of per-microbatch means — equal
+    microbatch sizes are enforced by the driver).  Pipe-replicated
+    leaves (embed/head/norms) get their gradients ``psum``-med over
+    ``pipe`` (each stage contributes only its own, mostly-zero slice of
+    the chain rule), which also keeps their replicas bitwise in sync.
+
+    The ≤2-trace contract, the donated-buffer discipline, and the
+    fori_loop trip-count padding are inherited unchanged.
+    """
+    S = int(mesh.shape["pipe"])
+    num_ticks = num_pipeline_ticks(num_micro, S)
+    pipe_perm = [(s_, s_ + 1) for s_ in range(S - 1)]
+    dp_axes = pplan.dp_axes
+    loss_axes = pplan.pop_axes + dp_axes
+    flat_lids = jax.tree_util.tree_flatten(layer_ids)[0]
+
+    def _sync_pipe_grads(g):
+        """psum pipe-replicated (non-stage-split) leaves' grads over pipe."""
+        flat, td = jax.tree_util.tree_flatten(g)
+        out = [
+            gl if not isinstance(lid, int) else lax.psum(gl, "pipe")
+            for gl, lid in zip(flat, flat_lids)
+        ]
+        return jax.tree_util.tree_unflatten(td, out)
+
+    def chunk_fn(population, opt_state, batches, lrs, keydata, gates, n_valid):
+        _CHUNK_TRACES[0] += 1
+        sid = lax.axis_index("pipe")
+
+        def member_loss(pm, mb):
+            # mb leaves are (num_micro, b, ...); losses accumulate in f32
+            x_sds = jax.eval_shape(
+                stage_fns.embed, pm,
+                jax.tree_util.tree_map(lambda x: x[0], mb),
+            )
+
+            def tick(carry, t):
+                recv, acc = carry
+                m = t - sid
+                mi = jnp.clip(m, 0, num_micro - 1)
+                mbt = jax.tree_util.tree_map(
+                    lambda x: lax.dynamic_index_in_dim(
+                        x, mi, 0, keepdims=False
+                    ),
+                    mb,
+                )
+                x0 = stage_fns.embed(pm, mbt)
+                y = stage_fns.blocks(pm, jnp.where(sid == 0, x0, recv))
+                lv = stage_fns.head(pm, y, mbt)
+                active = (m >= 0) & (m < num_micro) & (sid == S - 1)
+                acc = acc + jnp.where(active, lv.astype(jnp.float32), 0.0)
+                sent = lax.ppermute(y, "pipe", perm=pipe_perm)
+                return (sent, acc), None
+
+            (_, acc), _ = lax.scan(
+                tick,
+                (jnp.zeros(x_sds.shape, x_sds.dtype),
+                 jnp.zeros((), jnp.float32)),
+                jnp.arange(num_ticks, dtype=jnp.int32),
+            )
+            # nonzero only on the last stage; _sync_pipe_grads/psum below
+            # restore the global view
+            return acc / num_micro
+
+        def body(i, carry):
+            p, s, _ = carry
+            batch, lr, kd, gate = jax.tree_util.tree_map(
+                lambda x: lax.dynamic_index_in_dim(x, i, 0, keepdims=False),
+                (batches, lrs, keydata, gates),
+            )
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape(
+                    (x.shape[0], num_micro, x.shape[1] // num_micro)
+                    + x.shape[2:]
+                ),
+                batch,
+            )
+            losses, g = jax.vmap(
+                lambda pm, bm: jax.value_and_grad(member_loss)(pm, bm)
+            )(p, micro)
+            g = _sync_pipe_grads(g)
+            if dp_axes:
+                g = jax.tree_util.tree_map(
+                    lambda x: lax.pmean(x, dp_axes), g
+                )
+            p2, s2 = jax.vmap(
+                lambda pm, gm, sm: opt_update(pm, gm, sm, lr)
+            )(p, g, s)
+            if with_mixing:
+                k = jax.random.wrap_key_data(kd)
+                p3, s3 = shardplan.mix_collective_sharded(
+                    k, p2, s2, mcfg, pplan, gate, use_pallas=use_pallas
+                )
+            else:
+                p3, s3 = p2, s2
+            loss_mean = lax.pmean(
+                jnp.mean(lax.psum(losses, "pipe")), loss_axes
+            )
+            return (p3, s3, loss_mean.astype(jnp.float32))
+
+        p, s, loss_last = lax.fori_loop(
+            0, n_valid, body,
+            (population, opt_state, jnp.zeros((), jnp.float32)),
+        )
+        return p, s, loss_last
+
+    f = shard_map(
+        chunk_fn,
+        mesh,
+        in_specs=(pspec, ospec, bspecs, P(), P(), P(), P()),
+        out_specs=(pspec, ospec, P()),
+        check_vma=False,
+    )
+    return jax.jit(f, donate_argnums=(0, 1) if donate else ())
+
+
 def train_population_sharded(
     key: jax.Array,
     init_fn: Callable[[jax.Array], PyTree],
@@ -409,6 +571,38 @@ def train_population_sharded(
             )
         return fused[chunk.mixing]
 
+    return _run_chunked_schedule(
+        mesh=mesh, n=n, tcfg=tcfg, data_fn=data_fn, sched=sched,
+        get_fused=get_fused, population=population, opt_state=opt_state,
+        comm_per_mix_step=comm_per_mix_step, record_fn=record_fn,
+        batch_leaf_spec=_batch_leaf_spec, key=key,
+        async_staging=async_staging,
+    )
+
+
+def _run_chunked_schedule(
+    *,
+    mesh,
+    n: int,
+    tcfg: TrainConfig,
+    data_fn: Callable,
+    sched: Schedule,
+    get_fused: Callable,
+    population: PyTree,
+    opt_state: PyTree,
+    comm_per_mix_step: float,
+    record_fn,
+    batch_leaf_spec: Callable,
+    key: jax.Array,
+    async_staging: Optional[bool],
+) -> TrainResult:
+    """The engines' shared dispatch loop: stage each chunk's inputs
+    (double-buffered on a staging thread when
+    :func:`resolve_async_staging` allows), run its donated executable,
+    accumulate exact host-side comm, and record history at the reference
+    loop's boundaries.  Shared verbatim by the single-stage and pipelined
+    engines — key derivation, padding, and staging are identical, so the
+    pipelined engine inherits the bitwise data order."""
     base_key = jax.random.fold_in(key, 1234)
     data_key = jax.random.fold_in(key, 5678)
     rep_sharding = NamedSharding(mesh, P())
@@ -449,7 +643,7 @@ def train_population_sharded(
         n_valid = jnp.asarray(chunk.length, jnp.int32)
 
         batches = jax.device_put(batches, jax.tree_util.tree_map(
-            lambda x: NamedSharding(mesh, _batch_leaf_spec(x.shape)), batches
+            lambda x: NamedSharding(mesh, batch_leaf_spec(x.shape)), batches
         ))
         lrs, keydata, gates, n_valid = jax.device_put(
             (lrs, keydata, gates, n_valid), rep_sharding
@@ -501,3 +695,172 @@ def train_population_sharded(
 
     history["wall_s"] = [time.time() - t0]
     return TrainResult(population, opt_state, history, comm_total)
+
+
+def train_population_pipelined(
+    key: jax.Array,
+    init_fn: Callable[[jax.Array], PyTree],
+    stage_fns,
+    data_fn: Callable[[int, int, jax.Array], Any],
+    tcfg: TrainConfig,
+    mcfg: MixingConfig,
+    num_blocks: int,
+    record_every: int = 25,
+    record_fn: Optional[Callable[[int, PyTree], Dict[str, float]]] = None,
+    mesh=None,
+    microbatches: int = 1,
+    async_staging: Optional[bool] = None,
+    split_gate_runs: bool = True,
+    param_specs=None,
+    pallas_shuffle: bool = False,
+) -> TrainResult:
+    """Pipeline-parallel counterpart of :func:`train_population_sharded`.
+
+    Takes :class:`StageFns` ``(embed, blocks, head)`` instead of a
+    monolithic ``loss_fn`` so the engine can cut the forward pass at the
+    stage boundaries; ``mesh`` must carry a ``pipe`` axis
+    (``launch.mesh`` kinds ``ens_pp``/``ens_dp_pp``).  Each member's
+    stacked-blocks leaves are sharded over ``pipe``
+    (:func:`repro.sharding.rules.stage_member_specs`) into contiguous
+    stages; every optimizer step splits its batch into ``microbatches``
+    equal microbatches and runs the GPipe schedule of
+    :func:`make_pipelined_chunk_fn`.  WASH mixing runs on per-stage
+    plans whose ppermute rings stay inside each stage's ens slice
+    (:mod:`repro.core.shardplan`).
+
+    Parity contract (asserted by ``tests/test_pipeline.py``): with one
+    stage and one microbatch this delegates to the fused single-stage
+    engine and is bitwise-identical to it; with ``S > 1`` the result
+    matches to numerical tolerance (microbatch gradient accumulation is
+    a mean of per-microbatch means, which reorders float sums).
+    """
+    if microbatches < 1:
+        raise ValueError(f"microbatches must be >= 1, got {microbatches}")
+    n = tcfg.population
+    if mesh is None:
+        from repro.launch.mesh import make_host_mesh
+
+        mesh = make_host_mesh(n, "ens_pp")
+    if "pipe" not in mesh.axis_names:
+        raise ValueError(
+            f"the pipelined engine needs a mesh with a 'pipe' axis "
+            f"(launch.mesh kinds ens_pp/ens_dp_pp); got {mesh.axis_names}"
+        )
+    sf = StageFns(*stage_fns)
+    S = int(mesh.shape["pipe"])
+
+    if S == 1 and microbatches == 1:
+        # the degenerate pipeline IS the single-stage engine: compose the
+        # loss and delegate, so (E, 1, 1, S=1) meshes are bitwise-identical
+        # to the existing fused path (size-1 axes drop out of the
+        # classification and the specs)
+        def loss_fn(pm, b):
+            return sf.head(pm, sf.blocks(pm, sf.embed(pm, b)), b)
+
+        return train_population_sharded(
+            key, init_fn, loss_fn, data_fn, tcfg, mcfg, num_blocks,
+            record_every=record_every, record_fn=record_fn, mesh=mesh,
+            async_staging=async_staging, split_gate_runs=split_gate_runs,
+            param_specs=param_specs, pallas_shuffle=pallas_shuffle,
+        )
+
+    if mcfg.kind in ("wash", "wash_opt") and mcfg.mode != "bucketed":
+        raise ValueError(
+            f"engine='shard_map' only lowers bucketed WASH plans; got "
+            f"mode={mcfg.mode!r}."
+        )
+
+    population = pop.init_population(init_fn, key, n, same_init=tcfg.same_init)
+    lids = infer_layer_ids(pop.member(population, 0), num_blocks)
+    tl = total_layers(num_blocks)
+
+    flat_lids = jax.tree_util.tree_flatten(lids)[0]
+    if not any(not isinstance(l, int) for l in flat_lids):
+        raise ValueError(
+            "stage-split training needs stacked-blocks leaves (one leaf "
+            "spanning all blocks along axis 0); this member has only "
+            "per-block leaves, which cannot be sharded over the pipe axis"
+        )
+    for lid, leaf in zip(flat_lids, jax.tree_util.tree_leaves(
+            pop.member(population, 0))):
+        if not isinstance(lid, int) and leaf.shape[0] % S:
+            raise ValueError(
+                f"stacked-blocks leaf of {leaf.shape[0]} layers does not "
+                f"split evenly over {S} pipeline stages"
+            )
+
+    opt_init, opt_update = make_optimizer(
+        tcfg.optimizer, momentum=tcfg.momentum, weight_decay=tcfg.weight_decay
+    )
+    opt_state = jax.vmap(opt_init)(population)
+
+    member_tpl = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), population
+    )
+    member_specs = (
+        param_specs if param_specs is not None
+        else jax.tree_util.tree_map(lambda _: P(), member_tpl)
+    )
+    stage_specs = sharding_rules.stage_member_specs(member_specs, lids, "pipe")
+    pplan = shardplan.plan_population_mixing(
+        mesh, member_tpl, stage_specs, mcfg, lids, tl, n
+    )
+    pspec = sharding_rules.population_pspecs(stage_specs, pplan.pop_axes)
+    ospec = sharding_rules.opt_pspecs(opt_state, pspec, pplan.pop_axes)
+    comm_per_mix_step = shardplan.static_shard_mix_comm(
+        pplan, opt_state=opt_state
+    )
+    pop_entry = (
+        pplan.pop_axes[0] if len(pplan.pop_axes) == 1
+        else tuple(pplan.pop_axes)
+    )
+    dp_sizes = 1
+    for a in pplan.dp_axes:
+        dp_sizes *= pplan.size(a)
+
+    try:
+        probe = jax.eval_shape(
+            lambda k: data_fn(0, 0, k), jax.random.fold_in(key, 0)
+        )
+    except Exception:  # non-traceable data_fn: probe with a real call
+        probe = data_fn(0, 0, jax.random.fold_in(key, 0))
+    split_batch_over_dp = bool(pplan.dp_axes) and all(
+        leaf.shape and leaf.shape[0] % dp_sizes == 0
+        for leaf in jax.tree_util.tree_leaves(probe)
+    )
+    for leaf in jax.tree_util.tree_leaves(probe):
+        local_b = leaf.shape[0] // (dp_sizes if split_batch_over_dp else 1)
+        split_microbatch_sizes(local_b, microbatches)
+
+    def _batch_leaf_spec(shape) -> P:
+        if split_batch_over_dp:
+            return P(None, pop_entry, tuple(pplan.dp_axes))
+        return P(None, pop_entry)
+
+    sched = build_schedule(
+        tcfg.total_steps, record_every, mcfg, split_gate_runs=split_gate_runs
+    )
+    use_pallas = pallas_shuffle or mcfg.pallas_shuffle
+
+    fused: Dict[bool, Callable] = {}
+
+    def get_fused(chunk: ChunkPlan, batches):
+        if chunk.mixing not in fused:
+            bspecs = jax.tree_util.tree_map(
+                lambda x: _batch_leaf_spec(x.shape), batches
+            )
+            fused[chunk.mixing] = make_pipelined_chunk_fn(
+                mesh, mcfg, lids, tl, opt_update, sf,
+                pspec, ospec, bspecs, num_micro=microbatches,
+                with_mixing=chunk.mixing, pplan=pplan,
+                use_pallas=use_pallas,
+            )
+        return fused[chunk.mixing]
+
+    return _run_chunked_schedule(
+        mesh=mesh, n=n, tcfg=tcfg, data_fn=data_fn, sched=sched,
+        get_fused=get_fused, population=population, opt_state=opt_state,
+        comm_per_mix_step=comm_per_mix_step, record_fn=record_fn,
+        batch_leaf_spec=_batch_leaf_spec, key=key,
+        async_staging=async_staging,
+    )

@@ -119,6 +119,34 @@ class Schedule:
         return sum(c.pad for c in self.chunks)
 
 
+def num_pipeline_ticks(num_micro: int, num_stages: int) -> int:
+    """Forward ticks of one GPipe-scheduled optimizer step: ``M + S - 1``
+    (fill + steady state + drain).  At tick ``t`` stage ``s`` processes
+    microbatch ``t - s`` when that index is live; the pipelined engine
+    masks the fill/drain bubbles, so per-step FLOPs scale by
+    ``(M + S - 1) / M`` — the classic GPipe bubble fraction."""
+    if num_micro < 1 or num_stages < 1:
+        raise ValueError(
+            f"need num_micro >= 1 and num_stages >= 1; got "
+            f"({num_micro}, {num_stages})"
+        )
+    return num_micro + num_stages - 1
+
+
+def split_microbatch_sizes(batch_size: int, num_micro: int) -> Tuple[int, int]:
+    """``(num_micro, batch_size // num_micro)`` with an exact-split check.
+
+    Equal microbatches make the pipelined loss (mean of per-microbatch
+    means) equal the single-shot batch mean, which is what the S>1
+    tolerance-parity contract relies on."""
+    if num_micro < 1 or batch_size % num_micro:
+        raise ValueError(
+            f"batch dim {batch_size} does not split into {num_micro} "
+            f"equal microbatches"
+        )
+    return num_micro, batch_size // num_micro
+
+
 def _gate_runs(
     wstart: int, wstop: int, gates: List[bool]
 ) -> List[Tuple[int, int]]:

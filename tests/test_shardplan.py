@@ -158,6 +158,35 @@ def test_shard_volumes_sum_at_most_global():
     assert shardplan.static_shard_mix_comm(papa_r) == d
 
 
+def test_stage_volumes_sum_to_the_plan_total():
+    """Pipeline accounting: per-stage exact volumes are a PARTITION of the
+    pipe-plan's global volume — ``static_shard_mix_comm`` reports their
+    literal float64 sum, so equality holds to the last ulp."""
+    from repro.sharding import rules
+
+    lids = infer_layer_ids(MEMBER, 2)
+    staged = rules.stage_member_specs(REPL, lids, "pipe")
+    mesh = fake_mesh(ens=2, data=1, pipe=2)
+    for kind in ("wash", "papa"):
+        pplan = _plan(mesh, staged, n=4, kind=kind)
+        assert pplan.num_stages == 2
+        per_stage = [shardplan.static_stage_mix_comm(pplan, s)
+                     for s in range(2)]
+        total = shardplan.static_shard_mix_comm(pplan)
+        assert sum(per_stage) == total, (kind, per_stage, total)
+        assert all(v >= 0 for v in per_stage) and total > 0
+        # never more than the single-stage plan moves
+        single = _plan(fake_mesh(ens=2), REPL, n=4, kind=kind)
+        assert total <= shardplan.static_shard_mix_comm(single) + 1e-6
+    with pytest.raises(ValueError, match="stage"):
+        shardplan.static_stage_mix_comm(pplan, 2)
+    # a single-stage plan: stage 0 IS the whole plan
+    single = _plan(fake_mesh(ens=2), REPL, n=4)
+    assert single.num_stages == 1
+    assert shardplan.static_stage_mix_comm(single, 0) == \
+        shardplan.static_shard_mix_comm(single)
+
+
 def test_unsharded_plans_match_global_plan_bitwise():
     """With no sharded leaf the builder must reproduce shf.make_plan
     exactly (same per-leaf key folds, same budgets) — this is what makes
