@@ -1,28 +1,53 @@
-"""Shared helpers for the benchmark harness."""
+"""Shared helpers for the benchmark harness.
+
+Timing flows through :mod:`repro.obs`: every :func:`time_fn` sample also
+lands in the telemetry registry (histogram ``bench.<name>``), so a bench
+run's timings and a live run's spans read through one API, and the JSON
+payloads all carry the same provenance block (:func:`with_provenance`)."""
 
 from __future__ import annotations
 
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, List, Optional, Tuple
 
 import jax
+
+from repro import obs
 
 Row = Tuple[str, float, str]  # (name, us_per_call, derived)
 
 
-def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2) -> float:
-    """Median wall-time per call in microseconds (jit-warmed)."""
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2,
+            name: Optional[str] = None) -> float:
+    """Median wall-time per call in microseconds (jit-warmed).
+
+    With ``name``, each timed sample is also observed into the telemetry
+    histogram ``bench.<name>`` (seconds), so bench timings re-read from
+    the same registry the engines report through."""
     for _ in range(warmup):
         out = fn(*args)
         jax.block_until_ready(out)
+    hist = (obs.get().registry.histogram(f"bench.{name}")
+            if name is not None and obs.get().enabled else None)
     ts = []
     for _ in range(iters):
         t0 = time.perf_counter()
         out = fn(*args)
         jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
+        if hist is not None:
+            hist.observe(ts[-1])
     ts.sort()
     return ts[len(ts) // 2] * 1e6
+
+
+def with_provenance(payload: dict) -> dict:
+    """Return ``payload`` with a ``provenance`` block (device kind, jax
+    version, timestamp) stamped in — the shared header for every bench
+    JSON artifact under ``benchmarks/out/``."""
+    prov = obs.provenance()
+    prov.pop("kind", None)
+    return {"provenance": prov, **payload}
 
 
 def fmt(kv: dict) -> str:

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 
-from benchmarks._util import Row, fmt, time_fn, tiny_engine_problem
+from benchmarks._util import (Row, fmt, time_fn, tiny_engine_problem,
+                              with_provenance)
 
 KEY = jax.random.key(0)
 
@@ -93,11 +94,12 @@ def _engine_step_rows(steps: int = 16):
         donate=False,
     )
 
-    us_unfused = time_fn(lambda: unfused(population, opt_state), iters=3)
+    us_unfused = time_fn(lambda: unfused(population, opt_state), iters=3,
+                         name="engine_unfused_step")
     us_fused = time_fn(
         lambda: fused(population, opt_state, batches, lrs, keydata, gates,
                       n_valid),
-        iters=3,
+        iters=3, name="engine_fused_chunk",
     )
     per_un, per_fu = us_unfused / steps, us_fused / steps
     return [
@@ -260,7 +262,7 @@ def _write_json(rows):
             "engine_run_async_staging", {}).get("us_per_call"),
     }
     with open(JSON_OUT, "w") as f:
-        json.dump(report, f, indent=2)
+        json.dump(with_provenance(report), f, indent=2)
 
 
 def run(quick: bool = True):
@@ -271,7 +273,8 @@ def run(quick: bool = True):
     x = jax.random.normal(KEY, (n, d), jnp.float32)
     perm = jnp.argsort(jax.random.uniform(jax.random.fold_in(KEY, 1), (n, d)), 0).astype(jnp.int32)
     mask = jax.random.bernoulli(jax.random.fold_in(KEY, 2), 0.05, (d,))
-    us_k = time_fn(lambda: ops.wash_shuffle(x, perm, mask, block_d=4096), iters=3)
+    us_k = time_fn(lambda: ops.wash_shuffle(x, perm, mask, block_d=4096),
+                   iters=3, name="kernel_wash_shuffle")
     us_r = time_fn(jax.jit(lambda: ref.wash_shuffle_ref(x, perm, mask)), iters=3)
     bytes_moved = (x.size * 4 * 2) + perm.size * 4 + mask.size
     rows.append(("kernel_wash_shuffle", us_k,

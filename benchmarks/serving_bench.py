@@ -57,7 +57,7 @@ import os
 
 import jax
 
-from benchmarks._util import Row, fmt, time_fn
+from benchmarks._util import Row, fmt, time_fn, with_provenance
 
 KEY = jax.random.key(0)
 
@@ -305,10 +305,28 @@ def run(quick: bool = True):
             results["serve_driver_chunked"]["resubmit_suffix_tokens"] = suffix
             results["serve_driver_chunked"]["resubmit_prompt_tokens"] = len(re_prompt)
 
+    # --- telemetry overhead: same driver workload, obs on vs off ---------
+    from repro import obs
+
+    def best_driver_s(reps: int = 2) -> float:
+        return min(_run_driver(cfg, soup, 16, quick)[3] for _ in range(reps))
+
+    on_s = best_driver_s()
+    tel = obs.get()
+    tel.enabled = False
+    try:
+        off_s = best_driver_s()
+    finally:
+        tel.enabled = True
+    add("serve_obs_overhead", (on_s - off_s) * 1e6,
+        {"enabled_s": on_s, "disabled_s": off_s,
+         "overhead_ratio": on_s / off_s})
+
     os.makedirs(os.path.dirname(JSON_OUT), exist_ok=True)
     with open(JSON_OUT, "w") as f:
-        json.dump({"batch": batch, "prompt": prompt, "max_new": max_new,
-                   "rows": results}, f, indent=2)
+        json.dump(with_provenance(
+            {"batch": batch, "prompt": prompt, "max_new": max_new,
+             "rows": results}), f, indent=2)
     return rows
 
 
@@ -376,6 +394,13 @@ def smoke() -> None:
         f"prefilled {chunked['resubmit_suffix_tokens']} of "
         f"{chunked['resubmit_prompt_tokens']} with "
         f"{chunked['resubmit_prefix_reused']} reused"
+    )
+    overhead = results["serve_obs_overhead"]["overhead_ratio"]
+    # registry observes are a handful of dict ops per decode step; the
+    # generous bound absorbs CPU wall-clock noise on these tiny shapes
+    assert overhead < 1.5, (
+        f"telemetry overhead ratio {overhead:.3f} exceeds the 1.5x smoke "
+        f"bound — instrumentation is supposed to be a few host-side ops"
     )
     from benchmarks._util import print_rows
 

@@ -550,7 +550,16 @@ def main(argv=None):
     ap.add_argument("--hints", action="store_true",
                     help="enable in-model GSPMD sharding constraints")
     ap.add_argument("--tag", default=None, help="suffix for the output file")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the telemetry event stream (per-pair "
+                         "lowering spans + final metric snapshots) as "
+                         "JSONL here; validate with "
+                         "tools/check_metrics_schema.py")
     args = ap.parse_args(argv)
+
+    from repro import obs
+
+    tel = obs.configure(jsonl=args.metrics_out)
 
     if args.pp_stages:
         if not args.arch:
@@ -565,6 +574,9 @@ def main(argv=None):
         print(f"[pipeline] total={rec['total_scalars']:.6e} "
               f"(= sum of stages) vs single-stage "
               f"{rec['single_stage_scalars']:.6e}")
+        tel.event("dryrun.pipeline_report", arch=rec["arch"],
+                  stages=rec["stages"], total_scalars=rec["total_scalars"])
+        tel.finalize()
         sys.exit(0)
 
     overrides = {}
@@ -600,8 +612,10 @@ def main(argv=None):
             print(f"[skip-cached] {tag}", flush=True)
             continue
         try:
-            rec = lower_pair(aid, sh, args.multi_pod, args.wash, args.mixing,
-                             args.full_unroll, overrides or None)
+            with tel.span("dryrun.lower_pair", arch=aid, shape=sh):
+                rec = lower_pair(aid, sh, args.multi_pod, args.wash,
+                                 args.mixing, args.full_unroll,
+                                 overrides or None)
             rec["overrides"] = overrides
         except Exception as e:  # noqa
             rec = {
@@ -624,6 +638,7 @@ def main(argv=None):
             print(f"[skip] {tag}: {rec['note']}", flush=True)
         else:
             print(f"[ERROR] {tag}: {rec['error']}", flush=True)
+    tel.finalize()
     sys.exit(0 if ok else 1)
 
 

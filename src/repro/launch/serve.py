@@ -299,7 +299,25 @@ def main(argv=None):
                     help="driver: keep refcount-0 prefix pages on an LRU "
                          "list (evicted only under pool pressure) so "
                          "recurring prompts skip their prefill compute")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the telemetry event stream (spans, compile "
+                         "events, SLO histograms, final metric snapshots) "
+                         "as JSONL here; validate with "
+                         "tools/check_metrics_schema.py")
+    ap.add_argument("--metrics-summary", action="store_true",
+                    help="print a telemetry metric summary on exit "
+                         "(repro.obs console sink)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the first "
+                         "instrumented spans into this directory (bounded "
+                         "window; view with TensorBoard or Perfetto)")
     args = ap.parse_args(argv)
+
+    from repro import obs
+
+    tel = obs.configure(jsonl=args.metrics_out,
+                        console=args.metrics_summary,
+                        profile_dir=args.profile_dir)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -316,14 +334,24 @@ def main(argv=None):
         if args.mesh != "none" or args.pp_stages:
             ap.error("--driver does not take --mesh/--pp-stages "
                      "(single-host runtime)")
-        _serve_driver(popn, cfg, args)
+        try:
+            _serve_driver(popn, cfg, args)
+        finally:
+            tel.finalize()
+            if args.metrics_out:
+                print(f"wrote telemetry stream -> {args.metrics_out}")
         return
 
     if args.continuous:
         if args.mesh != "none" or args.pp_stages:
             ap.error("--continuous does not take --mesh/--pp-stages "
                      "(single-host runtime)")
-        _serve_continuous(popn, cfg, args)
+        try:
+            _serve_continuous(popn, cfg, args)
+        finally:
+            tel.finalize()
+            if args.metrics_out:
+                print(f"wrote telemetry stream -> {args.metrics_out}")
         return
 
     batch = concrete_batch(cfg, jax.random.fold_in(key, 2),
@@ -357,6 +385,10 @@ def main(argv=None):
         soup, ens = np.asarray(outs["soup"]), np.asarray(outs["ensemble"])
         agree = float((soup[:, args.seq_len:] == ens[:, args.seq_len:]).mean())
         print(f"soup/ensemble token agreement: {agree:.0%}")
+
+    tel.finalize()
+    if args.metrics_out:
+        print(f"wrote telemetry stream -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

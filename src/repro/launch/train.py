@@ -125,7 +125,25 @@ def main(argv=None):
     ap.add_argument("--history", default=None,
                     help="dump the training history (loss/consensus/comm "
                          "per record window) as JSON here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the telemetry event stream (spans, compile "
+                         "events, comm-volume checkpoints, final metric "
+                         "snapshots) as JSONL here; validate with "
+                         "tools/check_metrics_schema.py")
+    ap.add_argument("--metrics-summary", action="store_true",
+                    help="print a telemetry metric summary on exit "
+                         "(repro.obs console sink)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the first "
+                         "instrumented spans into this directory (bounded "
+                         "window; view with TensorBoard or Perfetto)")
     args = ap.parse_args(argv)
+
+    from repro import obs
+
+    tel = obs.configure(jsonl=args.metrics_out,
+                        console=args.metrics_summary,
+                        profile_dir=args.profile_dir)
 
     cfg = get_arch(args.arch)
     if args.reduced:
@@ -248,6 +266,10 @@ def main(argv=None):
         os.makedirs(os.path.dirname(args.history) or ".", exist_ok=True)
         with open(args.history, "w") as f:
             json.dump(res.history, f, indent=2)
+
+    tel.finalize()
+    if args.metrics_out:
+        print(f"wrote telemetry stream -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Unified telemetry for the WASH repro: metrics registry, host-side
+span tracing, pluggable sinks, and bounded jax.profiler capture.
+
+Quick use::
+
+    from repro import obs
+
+    obs.configure(jsonl="metrics.jsonl", console=True)
+    with obs.get().span("train.chunk_execute", step=k):
+        ...                     # dispatch work
+    obs.get().finalize()        # flush metric snapshots, close sinks
+
+Everything is host-side Python: instrumented engine runs are bitwise
+identical to uninstrumented ones and compile exactly the same number of
+executables (``tests/test_obs_parity.py`` enforces this).  See
+``docs/OBSERVABILITY.md`` for the event schema and metric catalog.
+"""
+
+from .metrics import (
+    Counter, Gauge, Histogram, Registry,
+    DEFAULT_TIME_EDGES, RATIO_EDGES,
+    percentile, percentile_ms, summarize_samples,
+)
+from .events import (
+    Telemetry, JsonlSink, MemorySink, ConsoleSink,
+    configure, get, reset, provenance,
+)
+from .profiler import ProfileWindow
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "Registry",
+    "DEFAULT_TIME_EDGES", "RATIO_EDGES",
+    "percentile", "percentile_ms", "summarize_samples",
+    "Telemetry", "JsonlSink", "MemorySink", "ConsoleSink",
+    "configure", "get", "reset", "provenance",
+    "ProfileWindow",
+]

@@ -75,6 +75,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core.compat import donate_argnums
 from repro.core import averaging
@@ -346,6 +347,9 @@ def _build_admit(cfg: ModelConfig, ensemble: bool, S: int, n_pages: int,
     def program(params, k_pool, v_pool, tokens, page_ids, write_mask, key,
                 temperature):
         _PREFILL_TRACES[0] += 1
+        # trace-time host effect: the compile counters mirror the
+        # one-executable-per-geometry contract _*_TRACES guard
+        obs.get().record_compile("cont_prefill_admit", S=S)
         batch = {"tokens": tokens}
         if ensemble:
             logits, cache = jax.vmap(
@@ -398,6 +402,8 @@ def _build_chunk(cfg: ModelConfig, ensemble: bool, greedy: bool):
     def program(params, k_pool, v_pool, tokens, pos0, table, key,
                 temperature):
         _PREFILL_TRACES[0] += 1
+        obs.get().record_compile("cont_prefill_chunk",
+                                 T=int(tokens.shape[-1]))
         if ensemble:
             def member(p, kp, vp):
                 lg, pools = M.prefill_paged(
@@ -439,6 +445,8 @@ def _build_decode(cfg: ModelConfig, ensemble: bool, greedy: bool,
     def program(params, k_pool, v_pool, tokens, positions, steps, budgets,
                 active, page_tables, keys, temperature):
         _DECODE_TRACES[0] += 1
+        obs.get().record_compile("cont_decode",
+                                 slots=int(tokens.shape[0]))
         if ensemble:
             def member(p, kp, vp):
                 lg, pools = M.decode_step_paged(
@@ -661,6 +669,24 @@ class ContinuousServer:
         self.stats["lru_evictions"] = self._pool.lru_evictions
         self.stats["peak_pages_in_use"] = max(
             self.stats["peak_pages_in_use"], self._pool.used_count)
+        tel = obs.get()
+        if tel.enabled:
+            reg = tel.registry
+            reg.gauge("serve.pages_free").set(self._pool.free_count)
+            reg.gauge("serve.pages_retained").set(self._pool.retained_count)
+            reg.gauge("serve.pages_refcounted").set(self._pool.used_count)
+            reg.gauge("serve.pages_peak").set(
+                self.stats["peak_pages_in_use"])
+            # prefix-dedup hit rate: fraction of prompt tokens served from
+            # cached prefix pages instead of a prefill program (this is
+            # also the suffix-prefill token savings)
+            seen = (self.stats["prefill_tokens"]
+                    + self.stats["prefix_tokens_reused"])
+            if seen:
+                reg.gauge("serve.prefix_dedup_hit_rate").set(
+                    self.stats["prefix_tokens_reused"] / seen)
+                reg.gauge("serve.prefix_tokens_reused").set(
+                    self.stats["prefix_tokens_reused"])
 
     # -- chunked/suffix admission (the driver's scheduler hooks) ---------
 
@@ -919,15 +945,23 @@ class ContinuousServer:
             tables[i, :len(slot.pages)] = slot.pages
             keys.append(slot.key)
 
-        sampled, done, self._k_pool, self._v_pool = self._decode(
-            self.params, self._k_pool, self._v_pool,
-            jnp.asarray(tokens), jnp.asarray(positions), jnp.asarray(steps),
-            jnp.asarray(budgets), jnp.asarray(active), jnp.asarray(tables),
-            jnp.stack(keys), jnp.float32(max(self.temperature, 1e-6)),
-        )
+        tel = obs.get()
+        with tel.span("serve.decode_step", slots=self.active_slots):
+            sampled, done, self._k_pool, self._v_pool = self._decode(
+                self.params, self._k_pool, self._v_pool,
+                jnp.asarray(tokens), jnp.asarray(positions),
+                jnp.asarray(steps), jnp.asarray(budgets),
+                jnp.asarray(active), jnp.asarray(tables),
+                jnp.stack(keys), jnp.float32(max(self.temperature, 1e-6)),
+            )
         sampled = np.asarray(sampled)
         done = np.asarray(done)
         self.stats["decode_steps"] += 1
+        if tel.enabled:
+            tel.registry.counter("serve.decode_steps").inc()
+            tel.registry.histogram(
+                "serve.slot_occupancy", obs.RATIO_EDGES
+            ).observe(self.active_slots / self.max_slots)
 
         for i, slot in enumerate(self._slots):
             if slot is None:

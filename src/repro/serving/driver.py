@@ -53,6 +53,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro import obs
 from repro.serving.batching import ContinuousServer, Request, Result
 
 __all__ = ["QueueFull", "RequestMetrics", "RequestDriver",
@@ -192,6 +193,9 @@ class RequestDriver:
             rec = self.metrics[uid]
             rec.cancelled = True
             rec.finished = self._clock()
+            tel = obs.get()
+            if tel.enabled:
+                tel.registry.counter("serve.requests_cancelled").inc()
             del self._streams[uid]
             if stream.on_finish is not None:
                 stream.on_finish(uid, None)
@@ -291,8 +295,31 @@ class RequestDriver:
         rec = self.metrics[uid]
         rec.finished = now
         rec.tokens = result.tokens
+        self._observe(rec)
         if stream.on_finish is not None:
             stream.on_finish(uid, result)
+
+    @staticmethod
+    def _observe(rec: RequestMetrics) -> None:
+        """Fold one finished request into the telemetry registry — the
+        live view of what ``summarize`` computes offline."""
+        tel = obs.get()
+        if not tel.enabled:
+            return
+        reg = tel.registry
+        reg.counter("serve.requests_finished").inc()
+        reg.counter("serve.tokens_generated").inc(len(rec.token_times))
+        if rec.ttft is not None:
+            reg.histogram("serve.ttft_s").observe(rec.ttft)
+        if rec.latency is not None:
+            reg.histogram("serve.latency_s").observe(rec.latency)
+        if len(rec.token_times) > 1:
+            h = reg.histogram("serve.intertoken_s")
+            for gap in np.diff(rec.token_times):
+                h.observe(float(gap))
+        tel.event("serve.request_finished", uid=str(rec.uid),
+                  ttft_s=rec.ttft, latency_s=rec.latency,
+                  tokens=len(rec.token_times))
 
     # -- synchronous serving loops --------------------------------------
 
@@ -394,19 +421,27 @@ def poisson_arrivals(requests: Sequence[Request], rate: float, seed: int = 0
     return out
 
 
-def _pct_ms(values: List[float], q: float) -> Optional[float]:
-    return float(np.percentile(values, q)) * 1e3 if values else None
+# thin alias kept for older callers — the math now lives in repro.obs
+# (exact raw-sample percentiles, None-safe: empty input returns None, a
+# single sample answers every q with itself)
+_pct_ms = obs.percentile_ms
 
 
 def summarize(metrics: Dict[Any, RequestMetrics]) -> Dict[str, Any]:
     """SLO view of a finished run: TTFT percentiles, inter-token-gap
-    percentiles, end-to-end latency, and generated tokens/sec."""
+    percentiles, end-to-end latency, and generated tokens/sec.
+
+    Built on :func:`repro.obs.percentile` so every degenerate shape is
+    guarded in one place: an empty metrics dict, all-cancelled runs,
+    zero-token requests (empty ``token_times``), and single-sample p99s
+    all produce ``None``/0 fields instead of raising."""
     done = [m for m in metrics.values()
             if m.finished is not None and not m.cancelled]
-    ttfts = [m.ttft for m in done if m.ttft is not None]
+    ttfts = [m.ttft for m in done]            # None-safe: obs drops holes
     gaps: List[float] = []
     for m in done:
-        gaps.extend(np.diff(m.token_times).tolist())
+        if len(m.token_times) > 1:            # zero/one-token requests
+            gaps.extend(np.diff(m.token_times).tolist())
     lats = [m.latency for m in done]
     n_tok = sum(len(m.token_times) for m in done)
     span = (max(m.finished for m in done) - min(m.arrival for m in done)
@@ -416,8 +451,8 @@ def summarize(metrics: Dict[Any, RequestMetrics]) -> Dict[str, Any]:
         "cancelled": sum(m.cancelled for m in metrics.values()),
         "generated_tokens": n_tok,
         "tokens_per_s": n_tok / span if span > 0 else None,
-        "ttft_p50_ms": _pct_ms(ttfts, 50),
-        "ttft_p99_ms": _pct_ms(ttfts, 99),
-        "intertoken_p99_ms": _pct_ms(gaps, 99),
-        "latency_p99_ms": _pct_ms(lats, 99),
+        "ttft_p50_ms": obs.percentile_ms(ttfts, 50),
+        "ttft_p99_ms": obs.percentile_ms(ttfts, 99),
+        "intertoken_p99_ms": obs.percentile_ms(gaps, 99),
+        "latency_p99_ms": obs.percentile_ms(lats, 99),
     }

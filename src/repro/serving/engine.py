@@ -66,6 +66,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.core import averaging
 from repro.core.compat import donate_argnums, shard_map
@@ -186,6 +187,8 @@ def _ensemble_step(cfg: ModelConfig):
 def _build_prefill(cfg: ModelConfig, ensemble: bool, capacity: int):
     def program(params, batch):
         _PREFILL_TRACES[0] += 1
+        # trace-time host effect mirroring the one-trace-per-shape contract
+        obs.get().record_compile("serve_prefill", capacity=capacity)
         if ensemble:
             return jax.vmap(
                 lambda p: M.prefill(p, cfg, batch, capacity=capacity)
@@ -201,6 +204,7 @@ def _build_decode(cfg: ModelConfig, ensemble: bool, S: int, max_new: int,
 
     def program(params, tokens, cache, first_logits, keys, temperature):
         _DECODE_TRACES[0] += 1
+        obs.get().record_compile("serve_decode", S=S, max_new=max_new)
         B = tokens.shape[0]
         if ensemble:
             first_logits = averaging.balanced_mean(first_logits)
@@ -286,6 +290,8 @@ def _build_staged_prefill(cfg: ModelConfig, stages: int, B: int, S: int,
 
     def program(params, batch):
         _PREFILL_TRACES[0] += 1
+        obs.get().record_compile("serve_prefill_staged", stages=stages,
+                                 capacity=capacity)
         sid = jax.lax.axis_index("pipe")
         cache = M.init_cache(local_cfg, batch["tokens"].shape[0], capacity)
         h = M.prefill_embed(params, cfg, batch)
@@ -320,6 +326,8 @@ def _build_staged_decode(cfg: ModelConfig, stages: int, B: int, S: int,
 
     def program(params, tokens, cache, first_logits, keys, temperature):
         _DECODE_TRACES[0] += 1
+        obs.get().record_compile("serve_decode_staged", stages=stages,
+                                 S=S, max_new=max_new)
         nxt = _sample(first_logits, keys, 0, temperature, greedy)
         buf = jnp.zeros((B, S + max_new), jnp.int32)
         buf = jax.lax.dynamic_update_slice(buf, tokens.astype(jnp.int32), (0, 0))
@@ -535,9 +543,12 @@ def generate(
             params, batch, keys, mesh, _staged_param_specs(params)
         )
         tokens = batch["tokens"]
-    logits, cache = prefill_fn(params, batch)
-    return decode_fn(params, tokens, cache, logits, keys,
-                     jnp.float32(max(temperature, 1e-6)))
+    tel = obs.get()
+    with tel.span("serve.prefill", S=S, B=B):
+        logits, cache = prefill_fn(params, batch)
+    with tel.span("serve.decode", S=S, max_new=max_new_tokens):
+        return decode_fn(params, tokens, cache, logits, keys,
+                         jnp.float32(max(temperature, 1e-6)))
 
 
 # ---------------------------------------------------------------------------

@@ -51,6 +51,7 @@ from jax import lax
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.configs.base import TrainConfig
 from repro.core import population as pop
 from repro.core import shardplan
@@ -161,6 +162,9 @@ def make_fused_chunk_fn(
 
     def chunk_fn(population, opt_state, batches, lrs, keydata, gates, n_valid):
         _CHUNK_TRACES[0] += 1
+        # host-side effect at trace time only: the compile counter mirrors
+        # the ≤2-executables contract _CHUNK_TRACES guards
+        obs.get().record_compile("train_chunk", mixing=bool(with_mixing))
 
         # the loss rides the fori_loop carry, whose dtype is fixed up
         # front — derive it from loss_fn so non-f32 losses (x64, bf16)
@@ -342,6 +346,9 @@ def make_pipelined_chunk_fn(
 
     def chunk_fn(population, opt_state, batches, lrs, keydata, gates, n_valid):
         _CHUNK_TRACES[0] += 1
+        obs.get().record_compile(
+            "train_chunk_pipelined", mixing=bool(with_mixing)
+        )
         sid = lax.axis_index("pipe")
 
         def member_loss(pm, mb):
@@ -661,22 +668,43 @@ def _run_chunked_schedule(
         else None
     )
 
+    tel = obs.get()
+    # mirrors comm_total add-for-add (same value, same order, from 0.0),
+    # so the counter snapshot bit-equals the exact float64 accounting
+    comm_counter = tel.registry.counter("train.comm_scalars") if tel.enabled else None
+
+    def staged_timed(chunk: ChunkPlan):
+        # runs on the staging thread when double-buffered: the histogram's
+        # total vs wall time is the staging-thread occupancy
+        with tel.span("train.stage", step=chunk.stop - 1):
+            return stage(chunk)
+
     t0 = time.time()
     try:
-        nxt = executor.submit(stage, chunks[0]) if executor else None
+        nxt = executor.submit(staged_timed, chunks[0]) if executor else None
         for i, chunk in enumerate(chunks):
-            staged = nxt.result() if executor else stage(chunk)
+            staged = nxt.result() if executor else staged_timed(chunk)
             if executor and i + 1 < len(chunks):
                 # double buffering: the staging thread builds chunk i+1's
                 # inputs while the devices execute chunk i
-                nxt = executor.submit(stage, chunks[i + 1])
+                nxt = executor.submit(staged_timed, chunks[i + 1])
 
-            population, opt_state, loss_last = get_fused(chunk, staged[0])(
-                population, opt_state, *staged
-            )
+            with tel.span("train.chunk_execute", step=chunk.stop - 1,
+                          mixing=chunk.mixing):
+                population, opt_state, loss_last = get_fused(
+                    chunk, staged[0]
+                )(population, opt_state, *staged)
+            mix_steps = 0
             for g in chunk.gates:  # per-step float64 adds, as the reference
                 if g:
                     comm_total += comm_per_mix_step
+                    mix_steps += 1
+                    if comm_counter is not None:
+                        comm_counter.inc(comm_per_mix_step)
+            if mix_steps and tel.enabled:
+                tel.event("train.comm_volume",
+                          comm_per_mix_step=comm_per_mix_step,
+                          mix_steps=mix_steps, comm_total=comm_total)
 
             if chunk.record:
                 step = chunk.stop - 1  # chunk boundary == record boundary
@@ -686,14 +714,28 @@ def _run_chunked_schedule(
                     float(avg_distance_to_consensus(population))
                 )
                 history["comm"].append(comm_total)
+                extras = {}
                 if record_fn is not None:
                     for k_, v in record_fn(step, population).items():
                         history.setdefault(k_, []).append(v)
+                        extras[k_] = v
+                if tel.enabled:
+                    wall = time.time() - t0
+                    if wall > 0:
+                        tel.registry.gauge("train.steps_per_s").set(
+                            chunk.stop / wall
+                        )
+                    tel.event("train.record", step=step,
+                              loss=history["loss"][-1],
+                              consensus=history["consensus"][-1],
+                              comm=comm_total, **extras)
     finally:
         if executor is not None:
             executor.shutdown(wait=True)
 
     history["wall_s"] = [time.time() - t0]
+    if tel.enabled:
+        tel.registry.gauge("train.wall_s").set(history["wall_s"][0])
     return TrainResult(population, opt_state, history, comm_total)
 
 

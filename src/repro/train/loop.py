@@ -18,6 +18,7 @@ from typing import Any, Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import TrainConfig
 from repro.core import population as pop
 from repro.core.consensus import avg_distance_to_consensus
@@ -117,6 +118,11 @@ def train_population(
     base_key = jax.random.fold_in(key, 1234)
     data_key = jax.random.fold_in(key, 5678)
 
+    tel = obs.get()
+    # mirrors comm_total add-for-add so the counter bit-equals the exact
+    # host-side accounting (see the fused engine's identical mirror)
+    comm_counter = tel.registry.counter("train.comm_scalars") if tel.enabled else None
+
     t0 = time.time()
     for step in range(tcfg.total_steps):
         lr = cosine_lr(step, tcfg.total_steps, tcfg.lr, tcfg.min_lr, tcfg.warmup_steps)
@@ -125,22 +131,48 @@ def train_population(
             lambda *xs: jnp.stack(xs),
             *[data_fn(m, step, jax.random.fold_in(dk, m)) for m in range(n)],
         )
-        population, opt_state, loss = train_step(population, opt_state, batches, lr)
+        with tel.span("train.step", step=step):
+            population, opt_state, loss = train_step(
+                population, opt_state, batches, lr
+            )
 
         if mixing_due(step, mcfg):
             population, opt_state, comm = mix_step(
                 population, opt_state, step_key(base_key, step)
             )
-            comm_total += float(comm) if static_comm is None else static_comm
+            comm_step = float(comm) if static_comm is None else static_comm
+            comm_total += comm_step
+            if comm_counter is not None:
+                comm_counter.inc(comm_step)
+                tel.event("train.comm_volume", comm_per_mix_step=comm_step,
+                          mix_steps=1, comm_total=comm_total)
 
         if step % record_every == 0 or step == tcfg.total_steps - 1:
             history["step"].append(step)
             history["loss"].append(float(loss))
             history["consensus"].append(float(avg_distance_to_consensus(population)))
             history["comm"].append(comm_total)
+            extras = {}
             if record_fn is not None:
                 for k_, v in record_fn(step, population).items():
                     history.setdefault(k_, []).append(v)
+                    extras[k_] = v
+            if tel.enabled:
+                tel.registry.gauge("train.loss").set(history["loss"][-1])
+                wall = time.time() - t0
+                if wall > 0:
+                    tel.registry.gauge("train.steps_per_s").set(
+                        (step + 1) / wall
+                    )
+                # record_fn outputs become metric samples alongside the event
+                for k_, v in extras.items():
+                    tel.registry.gauge(f"train.record.{k_}").set(v)
+                tel.event("train.record", step=step,
+                          loss=history["loss"][-1],
+                          consensus=history["consensus"][-1],
+                          comm=comm_total, **extras)
 
     history["wall_s"] = [time.time() - t0]
+    if tel.enabled:
+        tel.registry.gauge("train.wall_s").set(history["wall_s"][0])
     return TrainResult(population, opt_state, history, comm_total)
