@@ -1,0 +1,29 @@
+"""Static analysis over the repo's compiled programs and source.
+
+Two halves, deliberately decoupled:
+
+* :mod:`repro.analysis.contracts` / :mod:`repro.analysis.matrix` — HLO
+  contract checks over the four compiled programs (needs jax and a
+  multi-device host);
+* :mod:`repro.analysis.lint` — stdlib-``ast`` repo lints (tracer
+  hazards, f32 accumulators, thread discipline) that import and run
+  without jax.
+
+This package namespace stays import-light so ``lint`` users (and the CI
+fast lane) never pay for jax init: import the submodules directly, or use
+the lazy attribute access below.
+"""
+
+from __future__ import annotations
+
+_SUBMODULES = ("contracts", "lint", "matrix")
+
+__all__ = list(_SUBMODULES)
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        import importlib
+
+        return importlib.import_module(f"repro.analysis.{name}")
+    raise AttributeError(f"module 'repro.analysis' has no attribute {name!r}")

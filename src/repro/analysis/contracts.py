@@ -1,0 +1,350 @@
+"""Compiled-program contracts over optimized HLO.
+
+Promotes :mod:`repro.launch.hlo_stats`'s HLO-text parsing into a
+programmatic checker: a :class:`Contract` states what a compiled program
+is allowed to do on the wire and with its buffers, and
+:func:`lower_and_check` / :func:`check_hlo` assert it against the
+optimized module XLA actually scheduled — not against what the Python
+source looks like it should lower to.
+
+What a contract can pin down:
+
+* **Collective footprint** — which collective kinds must appear
+  (``require_collectives``), which must not (``forbid_collectives``),
+  and exact/bounded op counts per kind (``counts``).  Async
+  ``-start``/``-done`` pairs count once (``hlo_stats`` handles the
+  pairing).
+* **Permute topology** — every ``collective-permute``'s
+  ``source_target_pairs`` must satisfy at least one :class:`PairRule`:
+  :func:`stage_ring` is the WASH mixer's invariant on an (ens, pipe)
+  mesh (``src ≡ tgt mod S`` — member exchange never crosses a stage
+  boundary), :func:`forward_hop` is staged decode's (``tgt == src + 1``,
+  never wrapping — activations only move one stage forward), and
+  :func:`backward_hop` is the AD-transposed gradient hop a training
+  pipeline's backward pass adds (``tgt == src - 1``).
+* **Donation honored** — the ``input_output_alias`` block of the
+  optimized module must alias *every* flat leaf of every donated
+  argument.  jax silently drops donation it cannot use; this turns the
+  silent drop into a failure.
+* **Collective dtypes** — the element types collectives move
+  (``collective_dtypes``), so a mixed-precision regression that starts
+  shipping f32 where bf16 was promised (or vice versa) fails loudly.
+
+Host-side companions (the accounting the paper's comm-volume claim rides
+on is *host* float64, it never lowers): :func:`check_host_comm_f64`
+asserts comm scalars are exact builtin floats (IEEE f64) and
+:func:`replay_comm` re-runs the per-step accumulation bit-for-bit.
+:func:`check_compile_count` wraps the engines' trace counters into the
+same violation vocabulary.
+
+The shipped contract matrix for the repo's four compiled programs lives
+in :mod:`repro.analysis.matrix`; ``tools/run_analysis.py`` runs it in CI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, Tuple
+
+import jax
+
+from repro.launch import hlo_stats
+
+__all__ = [
+    "Contract",
+    "CheckReport",
+    "ContractViolation",
+    "PairRule",
+    "stage_ring",
+    "forward_hop",
+    "backward_hop",
+    "flat_donated_params",
+    "check_hlo",
+    "lower_and_check",
+    "collective_footprint",
+    "check_host_comm_f64",
+    "replay_comm",
+    "check_compile_count",
+]
+
+
+class ContractViolation(AssertionError):
+    """A compiled program broke its contract.  ``problems`` lists every
+    failed clause; ``report`` (when present) carries the parsed HLO
+    evidence."""
+
+    def __init__(self, name: str, problems: Sequence[str],
+                 report: Optional["CheckReport"] = None) -> None:
+        self.name = name
+        self.problems = list(problems)
+        self.report = report
+        lines = "\n".join(f"  - {p}" for p in self.problems)
+        super().__init__(f"contract {name!r} violated:\n{lines}")
+
+
+@dataclasses.dataclass(frozen=True)
+class PairRule:
+    """A predicate over one collective-permute (src, tgt) pair."""
+
+    kind: str  # "stage_ring" | "forward_hop" | "backward_hop"
+    stages: int
+
+    def __post_init__(self) -> None:
+        if self.kind not in ("stage_ring", "forward_hop", "backward_hop"):
+            raise ValueError(f"unknown pair rule {self.kind!r}")
+        if self.stages < 1:
+            raise ValueError("stages must be >= 1")
+
+    def ok(self, src: int, tgt: int) -> bool:
+        if self.kind == "stage_ring":
+            return src % self.stages == tgt % self.stages
+        # on a pipe-only mesh device id == stage id, on (ens, pipe)
+        # id = e*S + p — either way stage = id % S and hops never wrap
+        if self.kind == "forward_hop":
+            return tgt == src + 1 and src % self.stages != self.stages - 1
+        # backward_hop: reverse-mode AD transposes the forward ppermute
+        # chain, shipping boundary gradients one stage back
+        return tgt == src - 1 and src % self.stages != 0
+
+    def describe(self) -> str:
+        if self.kind == "stage_ring":
+            return f"src ≡ tgt (mod {self.stages})"
+        if self.kind == "forward_hop":
+            return f"tgt == src + 1 (within a {self.stages}-stage pipe)"
+        return f"tgt == src - 1 (within a {self.stages}-stage pipe)"
+
+
+def stage_ring(stages: int) -> PairRule:
+    """Permutes stay inside one stage's ens ring: ``src ≡ tgt mod S``."""
+    return PairRule("stage_ring", stages)
+
+
+def forward_hop(stages: int) -> PairRule:
+    """Permutes move exactly one stage forward, never wrapping."""
+    return PairRule("forward_hop", stages)
+
+
+def backward_hop(stages: int) -> PairRule:
+    """Permutes move exactly one stage backward, never wrapping — the
+    AD-transposed image of :func:`forward_hop` in a training pipeline's
+    backward pass."""
+    return PairRule("backward_hop", stages)
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """What one compiled program may do on the wire / with its buffers.
+
+    ``counts`` maps a collective kind to an exact count (int) or an
+    inclusive ``(lo, hi)`` range.  ``collective_dtypes`` maps a kind to
+    the element dtypes it is allowed to move (HLO spellings: "f32",
+    "bf16", ...).  ``donate_argnums`` are positional argnums of the
+    *Python* callable; :func:`lower_and_check` expands them to flat HLO
+    parameter numbers via the example arguments' pytree structure."""
+
+    name: str
+    require_collectives: Tuple[str, ...] = ()
+    forbid_collectives: Tuple[str, ...] = ()
+    counts: Optional[Mapping[str, Any]] = None
+    permute_rules: Tuple[PairRule, ...] = ()
+    donate_argnums: Tuple[int, ...] = ()
+    collective_dtypes: Optional[Mapping[str, Sequence[str]]] = None
+
+
+@dataclasses.dataclass
+class CheckReport:
+    """Parsed evidence + verdict for one contract check."""
+
+    contract: Contract
+    counts: Dict[str, int]
+    bytes: Dict[str, int]
+    permute_pairs: List[List[Tuple[int, int]]]
+    dtypes: Dict[str, set]
+    aliased_params: set
+    expected_donated: Tuple[int, ...]
+    problems: List[str]
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems
+
+
+def flat_donated_params(args: Sequence[Any],
+                        donate_argnums: Sequence[int]) -> Tuple[int, ...]:
+    """Flat HLO parameter numbers covered by ``donate_argnums``.
+
+    jit flattens its arguments' pytrees in positional order, one HLO
+    parameter per leaf — so argnum ``i`` owns the contiguous run of
+    parameter numbers at its flatten offset."""
+    sizes = [len(jax.tree_util.tree_leaves(a)) for a in args]
+    offsets = [0]
+    for s in sizes:
+        offsets.append(offsets[-1] + s)
+    out: List[int] = []
+    for i in donate_argnums:
+        if not 0 <= i < len(args):
+            raise ValueError(f"donate argnum {i} out of range for "
+                             f"{len(args)} arguments")
+        out.extend(range(offsets[i], offsets[i] + sizes[i]))
+    return tuple(out)
+
+
+def _hlo_text(obj: Any) -> str:
+    """Accept raw HLO text, a ``.compile()``d executable, or anything
+    with ``as_text``."""
+    if isinstance(obj, str):
+        return obj
+    if hasattr(obj, "as_text"):
+        return obj.as_text()
+    raise TypeError(f"expected HLO text or a compiled executable, "
+                    f"got {type(obj)!r}")
+
+
+def check_hlo(hlo: Any, contract: Contract,
+              donated_params: Optional[Sequence[int]] = None,
+              raise_on_violation: bool = True) -> CheckReport:
+    """Assert ``contract`` against an optimized-HLO module.
+
+    ``donated_params`` are the flat parameter numbers that must appear in
+    ``input_output_alias`` (from :func:`flat_donated_params`; pass
+    explicitly when calling with raw text).  Returns the
+    :class:`CheckReport`; raises :class:`ContractViolation` on failure
+    unless ``raise_on_violation=False``."""
+    text = _hlo_text(hlo)
+    counts = hlo_stats.collective_counts(text)
+    byts = hlo_stats.collective_bytes(text)
+    pairs = hlo_stats.collective_permute_pairs(text)
+    dtypes = hlo_stats.collective_result_dtypes(text)
+    aliased = hlo_stats.input_output_aliased_params(text)
+    expected = tuple(donated_params or ())
+
+    problems: List[str] = []
+    for kind in contract.require_collectives:
+        if counts.get(kind, 0) == 0:
+            problems.append(f"required collective {kind!r} absent")
+    for kind in contract.forbid_collectives:
+        if counts.get(kind, 0) != 0:
+            problems.append(
+                f"forbidden collective {kind!r} present "
+                f"({counts[kind]} ops, {byts.get(kind, 0)} bytes)")
+    if contract.counts:
+        for kind, want in contract.counts.items():
+            have = counts.get(kind, 0)
+            if isinstance(want, tuple):
+                lo, hi = want
+                if not lo <= have <= hi:
+                    problems.append(
+                        f"{kind}: {have} ops outside [{lo}, {hi}]")
+            elif have != want:
+                problems.append(f"{kind}: {have} ops, expected {want}")
+    if contract.permute_rules:
+        if not pairs:
+            problems.append(
+                "permute rules given but no collective-permute lowered")
+        for op in pairs:
+            for src, tgt in op:
+                if not any(r.ok(src, tgt) for r in contract.permute_rules):
+                    rules = " or ".join(
+                        r.describe() for r in contract.permute_rules)
+                    problems.append(
+                        f"permute pair ({src} -> {tgt}) violates {rules}")
+    missing = sorted(set(expected) - aliased)
+    if missing:
+        problems.append(
+            f"donated parameters {missing} not aliased in input_output_alias"
+            f" (aliased: {sorted(aliased)}) — donation was dropped")
+    if contract.collective_dtypes:
+        for kind, allowed in contract.collective_dtypes.items():
+            extra = dtypes.get(kind, set()) - set(allowed)
+            if extra:
+                problems.append(
+                    f"{kind} moves dtypes {sorted(extra)} outside allowed "
+                    f"{sorted(allowed)}")
+
+    report = CheckReport(contract, counts, byts, pairs, dtypes, aliased,
+                         expected, problems)
+    if problems and raise_on_violation:
+        raise ContractViolation(contract.name, problems, report)
+    return report
+
+
+def lower_and_check(fn: Callable, args: Sequence[Any], contract: Contract,
+                    raise_on_violation: bool = True) -> CheckReport:
+    """Lower ``fn(*args)`` to optimized HLO and assert ``contract``.
+
+    ``fn`` may be a plain callable (jitted here, with the contract's
+    ``donate_argnums`` attached so the donation clause tests the real
+    thing) or an already-wrapped jit function (its own donation applies
+    — pass the contract's ``donate_argnums`` to state what *should* be
+    donated).  ``args`` may be arrays or ``jax.ShapeDtypeStruct``
+    templates; nothing is executed, only lowered and compiled."""
+    jitted = fn if hasattr(fn, "lower") else jax.jit(
+        fn, donate_argnums=contract.donate_argnums)
+    compiled = jitted.lower(*args).compile()
+    donated = flat_donated_params(args, contract.donate_argnums)
+    return check_hlo(compiled.as_text(), contract, donated_params=donated,
+                     raise_on_violation=raise_on_violation)
+
+
+def collective_footprint(hlo: Any) -> Dict[str, Any]:
+    """One-call summary (counts / bytes / permute pairs) for footprint
+    equality assertions — e.g. "the dryrun mixer lowers the identical
+    collectives as the real one"."""
+    text = _hlo_text(hlo)
+    return {
+        "counts": hlo_stats.collective_counts(text),
+        "bytes": hlo_stats.collective_bytes(text),
+        "permute_pairs": hlo_stats.collective_permute_pairs(text),
+    }
+
+
+# ---------------------------------------------------------------------------
+# host-side contracts: f64 comm accounting + compile counts
+# ---------------------------------------------------------------------------
+
+
+def check_host_comm_f64(values: Mapping[str, Any],
+                        name: str = "host-comm") -> None:
+    """Comm accounting must be exact host float64: every value a builtin
+    ``float`` (numpy float32/float64 scalars and jax arrays are rejected
+    — a device round-trip is exactly the truncation hazard the host-side
+    accounting exists to avoid) and finite."""
+    problems = []
+    for label, v in values.items():
+        if type(v) is not float:
+            problems.append(
+                f"{label} is {type(v).__name__}, not builtin float "
+                "(host f64)")
+        elif not math.isfinite(v):
+            problems.append(f"{label} is {v!r}, not finite")
+    if problems:
+        raise ContractViolation(name, problems)
+
+
+def replay_comm(per_mix_step: float, gates: Sequence[bool]) -> float:
+    """The engines' comm accumulation, replayed: one float64 add per
+    mixing-due step, from 0.0, in step order.  Bit-equal comparison
+    against an engine's ``comm_scalars`` IS the accounting contract —
+    same adds, same order, same rounding."""
+    total = 0.0
+    for g in gates:
+        if g:
+            total += per_mix_step
+    return total
+
+
+def check_compile_count(name: str, count: int, expect: Any) -> None:
+    """Trace-counter contract: ``expect`` is an exact int or an inclusive
+    ``(lo, hi)`` range (the train engine's contract is ``(1, 2)``: at
+    most one executable per gate variant)."""
+    if isinstance(expect, tuple):
+        lo, hi = expect
+        ok = lo <= count <= hi
+        want = f"[{lo}, {hi}]"
+    else:
+        ok = count == expect
+        want = str(expect)
+    if not ok:
+        raise ContractViolation(
+            name, [f"compiled {count} executables, contract allows {want}"])

@@ -1,0 +1,709 @@
+"""Repo lints: tracer hazards, f32 comm accumulators, thread discipline.
+
+Three rule families over stdlib ``ast`` (this module imports no jax, so
+the lint layer runs anywhere, CI included, without touching a backend):
+
+``tracer-hazard``
+    Host-only calls inside functions that jax traces (``jit`` /
+    ``shard_map`` / ``scan`` / ``vmap`` / ... bodies): ``float()`` /
+    ``int()`` on traced values, ``.item()``, ``np.*``, ``time.*`` and
+    stdlib ``random.*``.  Each of these either silently bakes a
+    trace-time constant into the executable or raises a
+    ``TracerConversionError`` at the first real call.  ``int()`` /
+    ``float()`` over static metadata (``x.shape[...]``, ``x.ndim``,
+    ``x.size``, ``len(...)``) is exempt — shapes are Python ints under
+    tracing — as are ``np.iinfo`` / ``np.finfo`` / dtype constructors,
+    which are trace-time constants by construction.
+
+``f32-accumulator``
+    Assignments to comm/metrics accounting names (``*comm*``,
+    ``*_total``, ``*_bytes``) from expressions that mention a narrow
+    float dtype (``float32`` / ``float16`` / ``bfloat16``).  The paper's
+    communication claim is reported from host-side accounting that must
+    stay exact float64 (``docs/OBSERVABILITY.md``): a float32 running sum
+    loses integer exactness past 2^24 bytes and breaks the bit-equal
+    replay contract checked by ``tools/check_metrics_schema.py``.
+
+``thread-discipline``
+    For classes that spawn threads (``threading.Thread(target=...)`` or
+    ``executor.submit(fn, ...)``): every attribute *written* by code the
+    thread target can reach must be lock-guarded at EVERY access in the
+    class — lexically inside ``with self.<lock>`` or in a method whose
+    call sites are all lock-held (computed as a greatest fixpoint over
+    the intra-class call graph, so private helpers called only under the
+    lock count as guarded).  ``__init__`` is exempt (it happens-before
+    the thread starts), as are synchronization primitives themselves
+    (``Lock`` / ``Event`` / ``Queue`` / ...).  The analysis is
+    class-scoped: module-level thread targets that touch no ``self``
+    state (e.g. the train engine's staging closure) have nothing to
+    check.
+
+Violations carry a stable ``key`` (rule:path:function:detail — no line
+numbers, so baselines survive unrelated edits).  ``load_baseline`` /
+``apply_baseline`` implement the *checked* suppression workflow: a
+baseline entry that no longer matches any violation is itself an error,
+so waivers cannot outlive the code they excused.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+__all__ = [
+    "Violation",
+    "lint_source",
+    "lint_file",
+    "lint_tree",
+    "load_baseline",
+    "apply_baseline",
+    "RULES",
+]
+
+RULES = ("tracer-hazard", "f32-accumulator", "thread-discipline")
+
+
+@dataclasses.dataclass(frozen=True)
+class Violation:
+    rule: str
+    path: str  # repo-relative (or as given)
+    line: int
+    func: str  # enclosing function qualname, or "<module>"
+    detail: str  # stable discriminator (e.g. "float()", "attr:_pending")
+    message: str
+
+    @property
+    def key(self) -> str:
+        """Baseline key — deliberately line-number free."""
+        return f"{self.rule}:{self.path}:{self.func}:{self.detail}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# ---------------------------------------------------------------------------
+# shared AST helpers
+# ---------------------------------------------------------------------------
+
+# callables whose function-valued arguments jax traces.  Bare names AND
+# attribute forms both count ("scan" / "lax.scan" / "jax.lax.scan");
+# "map" only as an attribute (lax.map), never the builtin.
+_TRACERS = {
+    "jit", "shard_map", "pmap", "vmap", "grad", "value_and_grad",
+    "scan", "fori_loop", "while_loop", "cond", "switch",
+    "remat", "checkpoint", "eval_shape", "associative_scan", "custom_vjp",
+}
+_TRACERS_ATTR_ONLY = {"map"}
+
+
+def _last_seg(func: ast.expr) -> Optional[str]:
+    """Final name segment of a call target: jax.lax.scan -> "scan"."""
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return None
+
+
+def _root_name(node: ast.expr) -> Optional[str]:
+    """Root of an attribute/subscript/call chain: np.iinfo(x).max -> "np"."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Call)):
+        node = node.func if isinstance(node, ast.Call) else node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _is_tracer_call(call: ast.Call) -> bool:
+    seg = _last_seg(call.func)
+    if seg in _TRACERS:
+        return True
+    return seg in _TRACERS_ATTR_ONLY and isinstance(call.func, ast.Attribute)
+
+
+def _is_tracer_ref(node: ast.expr) -> bool:
+    """Is this expression a reference to a tracing transform (jax.jit,
+    shard_map, ...)?  Used to resolve ``functools.partial(jax.jit, ...)``
+    decorators."""
+    return isinstance(node, (ast.Name, ast.Attribute)) and (
+        _last_seg(node) in _TRACERS
+    )
+
+
+class _Parented(ast.NodeVisitor):
+    def __init__(self) -> None:
+        self.parents: Dict[ast.AST, ast.AST] = {}
+
+    def generic_visit(self, node: ast.AST) -> None:
+        for child in ast.iter_child_nodes(node):
+            self.parents[child] = node
+        super().generic_visit(node)
+
+
+def _qualname(node: ast.AST, parents: Dict[ast.AST, ast.AST]) -> str:
+    parts: List[str] = []
+    cur: Optional[ast.AST] = node
+    while cur is not None:
+        if isinstance(cur, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            parts.append(cur.name)
+        elif isinstance(cur, ast.Lambda):
+            parts.append("<lambda>")
+        elif isinstance(cur, ast.ClassDef):
+            parts.append(cur.name)
+        cur = parents.get(cur)
+    return ".".join(reversed(parts)) or "<module>"
+
+
+# ---------------------------------------------------------------------------
+# rule 1: tracer hazards
+# ---------------------------------------------------------------------------
+
+_NP_STATIC_OK = {
+    "iinfo", "finfo", "dtype",
+    "int8", "int16", "int32", "int64", "uint8", "uint16", "uint32",
+    "uint64", "float16", "float32", "float64", "bool_",
+}
+
+
+def _is_static_metadata(expr: ast.expr) -> bool:
+    """True when ``int()``/``float()`` over this expression is trace-safe:
+    the value derives from shape/rank metadata, which jax exposes as
+    Python ints even under tracing."""
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in (
+            "shape", "ndim", "size",
+        ):
+            return True
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "len"):
+            return True
+    return False
+
+
+def _collect_traced(tree: ast.Module) -> List[ast.AST]:
+    """Function/lambda nodes whose bodies jax traces.
+
+    A function is traced when (a) it is decorated with a tracing
+    transform — directly (``@jax.jit``), via ``functools.partial``
+    (``@partial(jax.jit, static_argnums=...)``) or a transform call
+    (``@shard_map(...)``) — or (b) it is passed by name (or inline as a
+    lambda) to a tracing call anywhere in the module.  Functions nested
+    inside a traced function are traced with it.
+    """
+    by_name: Dict[str, List[ast.AST]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            by_name.setdefault(node.name, []).append(node)
+
+    traced: Set[ast.AST] = set()
+
+    def _mark_arg(arg: ast.expr) -> None:
+        if isinstance(arg, ast.Lambda):
+            traced.add(arg)
+        elif isinstance(arg, ast.Name):
+            for fn in by_name.get(arg.id, ()):
+                traced.add(fn)
+        elif isinstance(arg, ast.Call) and _last_seg(arg.func) == "partial":
+            for sub in arg.args:
+                _mark_arg(sub)
+
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in node.decorator_list:
+                if _is_tracer_ref(dec):
+                    traced.add(node)
+                elif isinstance(dec, ast.Call):
+                    if _is_tracer_call(dec):
+                        traced.add(node)
+                    elif _last_seg(dec.func) == "partial" and any(
+                        _is_tracer_ref(a) for a in dec.args
+                    ):
+                        traced.add(node)
+        if isinstance(node, ast.Call) and _is_tracer_call(node):
+            for arg in node.args:
+                _mark_arg(arg)
+            for kw in node.keywords:
+                # e.g. Thread-style f=..., or scan(f=body)
+                if kw.arg in ("f", "body", "body_fun", "cond_fun", "fun"):
+                    _mark_arg(kw.value)
+
+    # fold nested defs into their traced ancestors so each traced region
+    # is walked exactly once
+    roots: List[ast.AST] = []
+    parents = _Parented()
+    parents.visit(tree)
+    for fn in traced:
+        cur = parents.parents.get(fn)
+        inherited = False
+        while cur is not None:
+            if cur in traced:
+                inherited = True
+                break
+            cur = parents.parents.get(cur)
+        if not inherited:
+            roots.append(fn)
+    return roots
+
+
+def _tracer_hazards(tree: ast.Module, path: str,
+                    parents: Dict[ast.AST, ast.AST]) -> List[Violation]:
+    out: List[Violation] = []
+    for root in _collect_traced(tree):
+        fname = _qualname(root, parents)
+        for node in ast.walk(root):
+            if not isinstance(node, ast.Call):
+                continue
+            viol: Optional[str] = None
+            msg = ""
+            if isinstance(node.func, ast.Name) and node.func.id in (
+                "float", "int",
+            ):
+                if not (node.args and _is_static_metadata(node.args[0])):
+                    viol = f"{node.func.id}()"
+                    msg = (f"{node.func.id}() on a traced value forces a "
+                           "host transfer (exempt: shape/ndim/size/len "
+                           "metadata)")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "item"):
+                viol = ".item()"
+                msg = ".item() inside a traced function forces a host sync"
+            else:
+                root_id = _root_name(node.func)
+                seg = _last_seg(node.func)
+                if root_id in ("np", "numpy"):
+                    chain = {n.attr for n in ast.walk(node.func)
+                             if isinstance(n, ast.Attribute)}
+                    if not chain & _NP_STATIC_OK:
+                        viol = f"np.{seg}"
+                        msg = (f"numpy call ({ast.unparse(node.func)}) in a "
+                               "traced function is a trace-time constant — "
+                               "use jnp, or hoist to the host")
+                elif root_id == "time":
+                    viol = f"time.{seg}"
+                    msg = ("time.* in a traced function runs once at trace "
+                           "time, not per step")
+                elif root_id == "random":
+                    viol = f"random.{seg}"
+                    msg = ("stdlib random in a traced function bakes one "
+                           "draw into the executable — use jax.random with "
+                           "an explicit key")
+            if viol is not None:
+                out.append(Violation(
+                    "tracer-hazard", path, node.lineno,
+                    _qualname(node, parents) or fname, viol, msg,
+                ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule 2: f32 accumulators in comm/metrics accounting
+# ---------------------------------------------------------------------------
+
+# compound accounting names only: "comm_total", "bytes_total",
+# "tokens_total", anything mentioning comm.  A bare local "total" (e.g.
+# an on-device f32 metric reduction) is not accounting state.
+_ACC_NAME_RE = re.compile(r"comm|\w_(?:total|bytes)$")
+_NARROW = {"float32", "float16", "bfloat16", "f32", "f16", "bf16"}
+
+
+def _target_names(target: ast.expr) -> Iterable[str]:
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            yield node.id
+        elif isinstance(node, ast.Attribute):
+            yield node.attr
+
+
+def _mentions_narrow_float(expr: ast.expr) -> Optional[str]:
+    for node in ast.walk(expr):
+        if isinstance(node, ast.Attribute) and node.attr in _NARROW:
+            return node.attr
+        if isinstance(node, ast.Name) and node.id in _NARROW:
+            return node.id
+        if isinstance(node, ast.Constant) and node.value in _NARROW:
+            return str(node.value)
+    return None
+
+
+def _f32_accumulators(tree: ast.Module, path: str,
+                      parents: Dict[ast.AST, ast.AST]) -> List[Violation]:
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
+            targets, value = node.targets, node.value
+        elif isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+            if node.value is None:
+                continue
+            targets, value = [node.target], node.value
+        else:
+            continue
+        hit = None
+        for t in targets:
+            for name in _target_names(t):
+                if _ACC_NAME_RE.search(name):
+                    hit = name
+                    break
+            if hit:
+                break
+        if hit is None:
+            continue
+        narrow = _mentions_narrow_float(value)
+        if narrow is not None:
+            out.append(Violation(
+                "f32-accumulator", path, node.lineno,
+                _qualname(node, parents), f"{hit}:{narrow}",
+                f"accounting name {hit!r} assigned via {narrow} — comm/"
+                "metrics accumulators must stay exact float64 (Python "
+                "float); see docs/OBSERVABILITY.md",
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule 3: thread discipline
+# ---------------------------------------------------------------------------
+
+_SYNC_TYPES = {
+    "Lock", "RLock", "Condition", "Event", "Semaphore", "BoundedSemaphore",
+    "Barrier", "Queue", "SimpleQueue", "local", "Thread",
+}
+_LOCK_TYPES = {"Lock", "RLock", "Condition"}
+_MUTATORS = {
+    "append", "extend", "insert", "pop", "popleft", "appendleft", "remove",
+    "clear", "update", "add", "discard", "setdefault",
+}
+
+
+def _self_attr(node: ast.expr) -> Optional[str]:
+    """Innermost ``self.X`` attribute of a store/load chain:
+    ``self.metrics[uid].admitted`` -> "metrics"."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == "self"):
+            return node.attr
+        node = node.value
+    return None
+
+
+@dataclasses.dataclass
+class _FnInfo:
+    node: ast.AST
+    qualname: str
+    reads: List[Tuple[str, ast.AST, bool]]  # (attr, node, guarded)
+    writes: List[Tuple[str, ast.AST, bool]]
+    # (callee-name, guarded) for self.X() calls / property loads / bare
+    # calls of sibling nested functions
+    calls: List[Tuple[str, bool]]
+    is_entry: bool = False  # a thread target
+
+
+class _ClassScanner:
+    """Per-class accounting for the thread-discipline rule."""
+
+    def __init__(self, cls: ast.ClassDef,
+                 parents: Dict[ast.AST, ast.AST]) -> None:
+        self.cls = cls
+        self.parents = parents
+        self.fns: Dict[str, _FnInfo] = {}
+        self.lock_attrs: Set[str] = set()
+        self.sync_attrs: Set[str] = set()
+        self.entries: Set[str] = set()
+        self._scan()
+
+    def _scan(self) -> None:
+        # classify __init__-assigned sync primitives first
+        for stmt in self.cls.body:
+            if (isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef))
+                    and stmt.name == "__init__"):
+                for node in ast.walk(stmt):
+                    if not isinstance(node, ast.Assign):
+                        continue
+                    if not (isinstance(node.value, ast.Call)
+                            and _last_seg(node.value.func) in _SYNC_TYPES):
+                        continue
+                    for t in node.targets:
+                        attr = _self_attr(t)
+                        if attr is None:
+                            continue
+                        self.sync_attrs.add(attr)
+                        if _last_seg(node.value.func) in _LOCK_TYPES:
+                            self.lock_attrs.add(attr)
+
+        for stmt in self.cls.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._scan_fn(stmt, stmt.name)
+
+    # -- per-function walk, tracking lexical lock guards -----------------
+
+    def _scan_fn(self, fn: ast.AST, name: str) -> None:
+        info = _FnInfo(fn, name, [], [], [])
+        self.fns[name] = info
+        body = fn.body if isinstance(
+            fn, (ast.FunctionDef, ast.AsyncFunctionDef)) else [fn.body]
+        for stmt in body:
+            self._walk(stmt, info, guarded=False)
+
+    def _walk(self, node: ast.AST, info: _FnInfo, guarded: bool) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            # nested function: its own accounting unit (a thread target
+            # candidate); lexical guards do not cross the boundary
+            self._scan_fn(node, f"{info.qualname}.<locals>.{node.name}")
+            return
+        if isinstance(node, (ast.With, ast.AsyncWith)):
+            locks_here = any(
+                _self_attr(item.context_expr) in self.lock_attrs
+                for item in node.items
+            )
+            for item in node.items:
+                self._walk(item.context_expr, info, guarded)
+            for stmt in node.body:
+                self._walk(stmt, info, guarded or locks_here)
+            return
+
+        self._record(node, info, guarded)
+        for child in ast.iter_child_nodes(node):
+            self._walk(child, info, guarded)
+
+    def _record(self, node: ast.AST, info: _FnInfo, guarded: bool) -> None:
+        # thread spawns: Thread(target=X) / executor.submit(X, ...)
+        if isinstance(node, ast.Call):
+            seg = _last_seg(node.func)
+            target: Optional[ast.expr] = None
+            if seg == "Thread":
+                for kw in node.keywords:
+                    if kw.arg == "target":
+                        target = kw.value
+            elif seg == "submit" and node.args:
+                target = node.args[0]
+            if target is not None:
+                tname = self._callable_name(target, info)
+                if tname is not None:
+                    self.entries.add(tname)
+
+            callee = self._self_call(node.func)
+            if callee is not None:
+                info.calls.append((callee, guarded))
+                return  # the func expr is a call edge, not a data read
+            if isinstance(node.func, ast.Name):
+                info.calls.append(
+                    (f"{info.qualname}.<locals>.{node.func.id}", guarded))
+
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)):
+            targets = (node.targets if isinstance(node, ast.Assign)
+                       else [node.target])
+            for t in targets:
+                attr = _self_attr(t)
+                if attr is not None:
+                    info.writes.append((attr, node, guarded))
+        elif isinstance(node, ast.Delete):
+            for t in node.targets:
+                attr = _self_attr(t)
+                if attr is not None:
+                    info.writes.append((attr, node, guarded))
+        elif isinstance(node, ast.Call):
+            # self.attr.append(...) and friends mutate the container
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr in _MUTATORS):
+                attr = _self_attr(node.func.value)
+                if attr is not None:
+                    info.writes.append((attr, node, guarded))
+        elif isinstance(node, ast.Attribute) and isinstance(
+                node.ctx, ast.Load):
+            attr = _self_attr(node)
+            if attr is None:
+                return
+            if attr in self.fns or attr in {
+                s.name for s in self.cls.body
+                if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }:
+                # method or property reference -> call edge
+                info.calls.append((attr, guarded))
+            else:
+                info.reads.append((attr, node, guarded))
+
+    def _self_call(self, func: ast.expr) -> Optional[str]:
+        if (isinstance(func, ast.Attribute)
+                and isinstance(func.value, ast.Name)
+                and func.value.id == "self"):
+            return func.attr
+        return None
+
+    def _callable_name(self, target: ast.expr,
+                       info: _FnInfo) -> Optional[str]:
+        if isinstance(target, ast.Name):
+            return f"{info.qualname}.<locals>.{target.id}"
+        name = self._self_call(target)
+        return name
+
+    # -- analysis --------------------------------------------------------
+
+    def violations(self, path: str) -> List[Violation]:
+        # keep only spawn targets that resolve to a function of this
+        # class: ``driver.submit(request)`` is a queue method taking a
+        # Request, not an executor spawning ``request`` on a thread
+        entries: Set[str] = set()
+        for e in self.entries:
+            r = e if e in self.fns else self._resolve(e)
+            if r is not None and r in self.fns:
+                entries.add(r)
+        if not entries:
+            return []
+
+        # thread-reachable functions: closure over call edges from entries
+        reachable: Set[str] = set()
+        frontier = list(entries)
+        while frontier:
+            cur = frontier.pop()
+            if cur in reachable:
+                continue
+            reachable.add(cur)
+            for callee, _ in self.fns[cur].calls:
+                resolved = self._resolve(callee)
+                if resolved is not None and resolved not in reachable:
+                    frontier.append(resolved)
+
+        # greatest-fixpoint lock_held: f is lock-held when every one of
+        # its call sites is lexically guarded or sits in a lock-held
+        # caller.  Entries and call-site-free functions are never
+        # lock-held (they can be entered from anywhere).
+        sites: Dict[str, List[Tuple[str, bool]]] = {n: [] for n in self.fns}
+        for caller, info in self.fns.items():
+            for callee, guarded in info.calls:
+                resolved = self._resolve(callee)
+                if resolved is not None:
+                    sites[resolved].append((caller, guarded))
+        lock_held = {
+            n: bool(sites[n]) and n not in entries and n != "__init__"
+            for n in self.fns
+        }
+        changed = True
+        while changed:
+            changed = False
+            for n, held in list(lock_held.items()):
+                if not held:
+                    continue
+                ok = all(g or lock_held.get(c, False) for c, g in sites[n])
+                if not ok:
+                    lock_held[n] = False
+                    changed = True
+
+        thread_written: Set[str] = set()
+        for n in reachable:
+            if n == "__init__":
+                continue
+            for attr, _, _ in self.fns[n].writes:
+                if attr not in self.sync_attrs:
+                    thread_written.add(attr)
+
+        out: List[Violation] = []
+        for n, info in self.fns.items():
+            if n == "__init__" or n.endswith(".<locals>.__init__"):
+                continue
+            held = lock_held.get(n, False)
+            for attr, node, guarded in info.writes + info.reads:
+                if attr not in thread_written or guarded or held:
+                    continue
+                kind = ("written" if any(
+                    a == attr and nd is node for a, nd, _ in info.writes
+                ) else "read")
+                out.append(Violation(
+                    "thread-discipline", path, node.lineno,
+                    f"{self.cls.name}.{n}", f"attr:{attr}",
+                    f"self.{attr} is written by the "
+                    f"{'/'.join(sorted(entries))} thread but {kind} "
+                    f"here without holding the lock "
+                    f"({', '.join(sorted(self.lock_attrs)) or 'none found'})",
+                ))
+        return out
+
+    def _resolve(self, callee: str) -> Optional[str]:
+        if callee in self.fns:
+            return callee
+        # nested-name fallback: "<method>.<locals>.f" recorded from a
+        # bare call may actually be a sibling method or a module function
+        tail = callee.rsplit(".", 1)[-1]
+        return tail if tail in self.fns else None
+
+
+def _thread_discipline(tree: ast.Module, path: str,
+                       parents: Dict[ast.AST, ast.AST]) -> List[Violation]:
+    out: List[Violation] = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            out.extend(_ClassScanner(node, parents).violations(path))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+
+def lint_source(src: str, path: str = "<string>") -> List[Violation]:
+    """All rules over one source string.  ``path`` labels the violations
+    (use a repo-relative path so baseline keys are machine-independent)."""
+    tree = ast.parse(src, filename=path)
+    p = _Parented()
+    p.visit(tree)
+    out: List[Violation] = []
+    out.extend(_tracer_hazards(tree, path, p.parents))
+    out.extend(_f32_accumulators(tree, path, p.parents))
+    out.extend(_thread_discipline(tree, path, p.parents))
+    return sorted(out, key=lambda v: (v.path, v.line, v.rule))
+
+
+def lint_file(path: Path, root: Optional[Path] = None) -> List[Violation]:
+    path = Path(path)
+    label = str(path.relative_to(root)) if root else str(path)
+    return lint_source(path.read_text(), label.replace("\\", "/"))
+
+
+def lint_tree(root: Path,
+              subdirs: Sequence[str] = ("src/repro",)) -> List[Violation]:
+    """Lint every ``*.py`` under ``root``'s ``subdirs`` (repo-relative
+    violation paths)."""
+    root = Path(root)
+    out: List[Violation] = []
+    for sub in subdirs:
+        base = root / sub
+        for path in sorted(base.rglob("*.py")):
+            out.extend(lint_file(path, root=root))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# checked suppression baseline
+# ---------------------------------------------------------------------------
+
+
+def load_baseline(path: Path) -> Dict[str, str]:
+    """``key  # justification`` lines -> {key: justification}.  Every
+    entry MUST carry a justification comment — an unexplained waiver is a
+    parse error, not a style nit."""
+    out: Dict[str, str] = {}
+    for lineno, raw in enumerate(Path(path).read_text().splitlines(), 1):
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        key, sep, why = line.partition("#")
+        key, why = key.strip(), why.strip()
+        if not sep or not why:
+            raise ValueError(
+                f"{path}:{lineno}: baseline entry {key!r} has no "
+                "justification comment (format: 'key  # why this is ok')")
+        out[key] = why
+    return out
+
+
+def apply_baseline(
+    violations: Sequence[Violation], baseline: Dict[str, str],
+) -> Tuple[List[Violation], List[str]]:
+    """(unwaived violations, stale baseline keys).  A stale key — one
+    matching no current violation — is an error at the caller: the code
+    it excused is gone, so the waiver must go too."""
+    keys = {v.key for v in violations}
+    remaining = [v for v in violations if v.key not in baseline]
+    stale = sorted(k for k in baseline if k not in keys)
+    return remaining, stale

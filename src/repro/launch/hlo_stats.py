@@ -35,8 +35,8 @@ _COLLECTIVES = (
     "collective-permute",
 )
 _OP_RE = re.compile(
-    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\]{},:()#* ]+?)\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(?:-start|-done)?\(",
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\]{},:()#* ]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(",
 )
 
 
@@ -105,8 +105,9 @@ def collective_permute_pairs(hlo_text: str):
     mesh) and stage-boundary hops move exactly one stage forward."""
     out = []
     for line in hlo_text.splitlines():
-        if "collective-permute" not in line or "-done(" in line:
-            continue
+        op = _OP_RE.match(line)
+        if not op or op.group(3) != "collective-permute" or op.group(4) == "-done":
+            continue  # pairs live on the sync op or the async -start line
         m = _PAIR_RE.search(line)
         if not m:
             continue
@@ -128,18 +129,81 @@ def collective_bytes(hlo_text: str, pod_boundary: int = 0) -> Dict[str, int]:
     """
     out = {k: 0 for k in _COLLECTIVES}
     out["crosspod"] = 0
+    pending: Dict[str, bool] = {}  # async -start op name -> crosses boundary
     for line in hlo_text.splitlines():
         m = _OP_RE.match(line)
         if not m:
             continue
-        shape_str, kind = m.group(1), m.group(2)
-        if "-done(" in line:
-            continue  # avoid double counting async start/done pairs
+        name, shape_str, kind, suffix = m.groups()
+        if suffix == "-start":
+            # Async pair: the -start op's result is an (operand, result,
+            # ...) tuple, so summing its shape tokens would double count.
+            # Bytes come from the matching -done op (whose result is
+            # exactly the collective's output); the group metadata lives
+            # only here, so remember whether it crosses the boundary.
+            pending[name] = bool(pod_boundary) and _crosses(line, pod_boundary)
+            continue
         b = _shape_bytes(shape_str)
         out[kind] += b
-        if pod_boundary and _crosses(line, pod_boundary):
+        if suffix == "-done":
+            om = re.match(r"\s*%?([\w.\-]+)", line[m.end():])
+            if om and pending.pop(om.group(1), False):
+                out["crosspod"] += b
+        elif pod_boundary and _crosses(line, pod_boundary):
             out["crosspod"] += b
     return out
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    """Number of collective ops per kind, async start/done pairs counted
+    once.  Kinds with no ops are present with count 0, so callers can
+    assert absence without ``.get``."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m or m.group(4) == "-start":
+            continue
+        out[m.group(3)] += 1
+    return out
+
+
+def collective_result_dtypes(hlo_text: str) -> Dict[str, set]:
+    """Result element dtypes per collective kind actually present, e.g.
+    ``{"all-reduce": {"f32"}}``.  Async pairs contribute the -done op's
+    result dtype (the collective's real output)."""
+    out: Dict[str, set] = {}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.match(line)
+        if not m or m.group(4) == "-start":
+            continue
+        dts = out.setdefault(m.group(3), set())
+        for dt, _ in _SHAPE_RE.findall(m.group(2)):
+            if dt in _DTYPE_BYTES:
+                dts.add(dt)
+    return out
+
+
+_ALIAS_ENTRY_RE = re.compile(r"\{[\d, ]*\}\s*:\s*\(\s*(\d+)\s*,")
+
+
+def input_output_aliased_params(hlo_text: str) -> set:
+    """Parameter numbers the compiler aliased to outputs, parsed from the
+    HloModule header's ``input_output_alias={ {out}: (param, {}, kind) }``
+    block.  Empty when donation was dropped or never requested — jit
+    flattens pytree args, so each HLO parameter is one donated leaf."""
+    m = re.search(r"input_output_alias=\{", hlo_text)
+    if not m:
+        return set()
+    depth, i = 1, m.end()
+    while depth and i < len(hlo_text):
+        c = hlo_text[i]
+        if c == "{":
+            depth += 1
+        elif c == "}":
+            depth -= 1
+        i += 1
+    block = hlo_text[m.end() : i - 1]
+    return {int(p) for p in _ALIAS_ENTRY_RE.findall(block)}
 
 
 def roofline_terms(

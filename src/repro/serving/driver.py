@@ -205,8 +205,12 @@ class RequestDriver:
 
     @property
     def has_work(self) -> bool:
-        return bool(self._pending or self._prefilling
-                    or self.server.active_slots)
+        # taken under the lock: run() polls this from the caller's thread
+        # while the pump thread mutates _pending/_prefilling (RLock, so
+        # lock-held callers like drain() re-enter freely)
+        with self._lock:
+            return bool(self._pending or self._prefilling
+                        or self.server.active_slots)
 
     def tick(self) -> bool:
         """One scheduling round: admit whatever fits (FIFO), run ONE
@@ -354,7 +358,8 @@ class RequestDriver:
             if not self.tick() and i < len(sched):
                 time.sleep(min(1e-3, max(0.0, sched[i][0]
                                          - (self._clock() - t0))))
-        return dict(self.metrics)
+        with self._lock:
+            return dict(self.metrics)
 
     # -- async front-end -------------------------------------------------
 

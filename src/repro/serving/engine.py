@@ -198,8 +198,19 @@ def _build_prefill(cfg: ModelConfig, ensemble: bool, capacity: int):
     return jax.jit(program)
 
 
-def _build_decode(cfg: ModelConfig, ensemble: bool, S: int, max_new: int,
-                  greedy: bool):
+def _decode_program(cfg: ModelConfig, ensemble: bool, S: int, max_new: int,
+                    greedy: bool):
+    """The raw (unjitted) scan-decode program body.
+
+    Split from :func:`_build_decode` so the contract matrix
+    (``repro.analysis.matrix``) can jit it with *explicit* donation and
+    verify the KV-cache alias from optimized HLO even on CPU, where the
+    serving path's :func:`repro.core.compat.donate_argnums` is a no-op.
+    The cache is argument 2 — the donation contract's subject: the
+    program returns ``(tokens, final_cache)`` so XLA can alias the
+    donated input cache to the output (a donated buffer with no matching
+    output is silently unusable — the contract matrix caught exactly
+    that); :func:`generate` drops the cache half."""
     prefix = internal_prefix(cfg)
 
     def program(params, tokens, cache, first_logits, keys, temperature):
@@ -216,13 +227,19 @@ def _build_decode(cfg: ModelConfig, ensemble: bool, S: int, max_new: int,
         buf = jax.lax.dynamic_update_slice(buf, tokens.astype(jnp.int32), (0, 0))
         buf = buf.at[:, S].set(nxt)
 
-        new_toks, _ = M.decode_scan(
+        new_toks, cache = M.decode_scan(
             params, cfg, nxt, cache, prefix + S, max_new - 1,
             lambda lg, i: _sample(lg, keys, i + 1, temperature, greedy),
             step_fn=_ensemble_step(cfg) if ensemble else None,
         )
-        return jax.lax.dynamic_update_slice(buf, new_toks, (0, S + 1))
+        return jax.lax.dynamic_update_slice(buf, new_toks, (0, S + 1)), cache
 
+    return program
+
+
+def _build_decode(cfg: ModelConfig, ensemble: bool, S: int, max_new: int,
+                  greedy: bool):
+    program = _decode_program(cfg, ensemble, S, max_new, greedy)
     return jax.jit(program, donate_argnums=_donate((2,)))
 
 
@@ -332,17 +349,17 @@ def _build_staged_decode(cfg: ModelConfig, stages: int, B: int, S: int,
         buf = jnp.zeros((B, S + max_new), jnp.int32)
         buf = jax.lax.dynamic_update_slice(buf, tokens.astype(jnp.int32), (0, 0))
         buf = buf.at[:, S].set(nxt)
-        new_toks, _ = M.decode_scan(
+        new_toks, cache = M.decode_scan(
             params, cfg, nxt, cache, S, max_new - 1,
             lambda lg, i: _sample(lg, keys, i + 1, temperature, greedy),
             step_fn=step_fn,
         )
-        return jax.lax.dynamic_update_slice(buf, new_toks, (0, S + 1))
+        return jax.lax.dynamic_update_slice(buf, new_toks, (0, S + 1)), cache
 
     f = shard_map(
         program, mesh=mesh,
         in_specs=(pspecs, P(), cspecs, P(), P(), P()),
-        out_specs=P(), check_vma=False,
+        out_specs=(P(), cspecs), check_vma=False,
     )
     return jax.jit(f, donate_argnums=_donate((2,)))
 
@@ -547,8 +564,9 @@ def generate(
     with tel.span("serve.prefill", S=S, B=B):
         logits, cache = prefill_fn(params, batch)
     with tel.span("serve.decode", S=S, max_new=max_new_tokens):
-        return decode_fn(params, tokens, cache, logits, keys,
-                         jnp.float32(max(temperature, 1e-6)))
+        out, _ = decode_fn(params, tokens, cache, logits, keys,
+                           jnp.float32(max(temperature, 1e-6)))
+        return out
 
 
 # ---------------------------------------------------------------------------

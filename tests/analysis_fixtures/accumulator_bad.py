@@ -1,0 +1,18 @@
+"""Fixture: comm/metrics accounting truncated through narrow floats."""
+
+import jax.numpy as jnp
+import numpy as np
+
+comm_total = np.float32(0.0)
+
+
+def track(batches):
+    bytes_total = jnp.zeros((), jnp.float32)
+    for b in batches:
+        bytes_total += np.float32(b)
+    return bytes_total
+
+
+class Meter:
+    def __init__(self):
+        self.comm_scalars = np.array(0.0, dtype="float32")

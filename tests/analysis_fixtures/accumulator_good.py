@@ -1,0 +1,19 @@
+"""Fixture: exact host-float accounting, plus the deliberate device-side
+f32 metric that must NOT be flagged (bare 'total' is not accounting)."""
+
+import jax.numpy as jnp
+
+comm_total = 0.0
+
+
+def track(batches):
+    bytes_total = 0.0
+    for b in batches:
+        bytes_total += float(b)
+    return bytes_total
+
+
+def device_metric(x):
+    # on-device f32 reduction: a metric value, not accounting state
+    total = jnp.zeros((), jnp.float32)
+    return total + jnp.sum(x)

@@ -1,0 +1,31 @@
+"""Fixture: the unguarded-cross-thread-read defect class.
+
+Models the exact bug repro.serving.driver shipped with (and the lint
+caught): a pump thread mutates state under the lock, while the caller
+thread polls the same attributes with no lock at all."""
+
+import threading
+
+
+class BadDriver:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending = []
+        self.metrics = {}
+        self._thread = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._pump, daemon=True)
+        self._thread.start()
+
+    def _pump(self):
+        with self._lock:
+            self._pending.append(1)
+            self.metrics["steps"] = len(self._pending)
+
+    @property
+    def has_work(self):
+        return bool(self._pending)
+
+    def snapshot(self):
+        return dict(self.metrics)

@@ -1,0 +1,35 @@
+"""Fixture: the disciplined version of threads_bad — every cross-thread
+attribute access holds the lock, and a helper whose call sites all hold
+it inherits lock-held status through the fixpoint."""
+
+import threading
+
+
+class GoodDriver:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._pending = []
+        self.metrics = {}
+        self._thread = None
+
+    def start(self):
+        self._thread = threading.Thread(target=self._pump, daemon=True)
+        self._thread.start()
+
+    def _pump(self):
+        with self._lock:
+            self._pending.append(1)
+            self._update()
+
+    def _update(self):
+        # called only with the lock held
+        self.metrics["steps"] = len(self._pending)
+
+    @property
+    def has_work(self):
+        with self._lock:
+            return bool(self._pending)
+
+    def snapshot(self):
+        with self._lock:
+            return dict(self.metrics)

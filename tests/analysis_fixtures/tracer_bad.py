@@ -1,0 +1,25 @@
+"""Fixture: every tracer-hazard class, inside genuinely traced functions.
+
+Linted by tests/test_analysis.py — never imported, never executed."""
+
+import random
+import time
+
+import jax
+import numpy as np
+
+
+@jax.jit
+def bad_step(x):
+    scale = float(x[0])
+    noise = np.mean(x)
+    t0 = time.time()
+    jitter = random.random()
+    return x * scale + noise + t0 + jitter
+
+
+def bad_scan(xs):
+    def body(c, x):
+        return c + x.item(), None
+
+    return jax.lax.scan(body, 0.0, xs)

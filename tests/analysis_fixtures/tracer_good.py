@@ -1,0 +1,31 @@
+"""Fixture: the exempt look-alikes of every tracer-hazard rule.
+
+Shape/ndim/size/len metadata through int()/float(), numpy dtype
+constructors and iinfo/finfo, host-side float() outside any traced
+function, and jax.random draws keyed per step."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def good_step(x, key):
+    b = int(x.shape[0])
+    rank = float(x.ndim)
+    lim = np.iinfo(np.int32).max
+    dt = np.dtype("float32")
+    noise = jax.random.normal(key, x.shape, dt)
+    return x * rank + noise + jnp.full((b,), lim, jnp.int32).sum()
+
+
+def host_side(x):
+    # not traced: host conversions are the POINT here
+    return float(np.mean(x))
+
+
+def good_scan(xs):
+    def body(c, x):
+        return c + jnp.sum(x), None
+
+    return jax.lax.scan(body, jnp.float32(0.0), xs)

@@ -452,10 +452,10 @@ def test_hlo_collectives_stay_in_stage_rings():
     _run("""
         import jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
+        from repro.analysis import contracts
         from repro.core.compat import make_mesh
         from repro.core.mixing import MixingConfig
         from repro.core import shardplan
-        from repro.launch.hlo_stats import collective_permute_pairs
 
         mesh = make_mesh((2, 4), ("ens", "pipe"))
         L, D = 8, 16
@@ -468,14 +468,14 @@ def test_hlo_collectives_stay_in_stage_rings():
         mcfg = MixingConfig(kind="wash", base_p=0.5, mode="bucketed")
         mixer = shardplan.make_shardlocal_mixer(mesh, mcfg, L, pop_specs,
                                                 opt_specs)
-        hlo = jax.jit(mixer).lower(pop_sds, opt_sds,
-                                   key_sds).compile().as_text()
-        ops = collective_permute_pairs(hlo)
-        assert ops, "expected collective-permutes in the WASH mixer"
-        for pairs in ops:
-            for src, tgt in pairs:
-                assert src % 4 == tgt % 4, (src, tgt)
-        print("OK mixer rings", ops)
+        rep = contracts.lower_and_check(
+            jax.jit(mixer), (pop_sds, opt_sds, key_sds),
+            contracts.Contract(
+                name="wash-mixer-rings",
+                require_collectives=("collective-permute",),
+                permute_rules=(contracts.stage_ring(4),),
+            ))
+        print("OK mixer rings", rep.permute_pairs)
 
         from repro.configs.base import ModelConfig
         from repro.models import transformer as M
@@ -490,17 +490,18 @@ def test_hlo_collectives_stay_in_stage_rings():
         _, decode = E._programs(cfg, False, 2, 4, 8, 16, True, pmesh,
                                 stages=4, params=params_sds)
         cache_sds = jax.eval_shape(lambda: M.init_cache(cfg, 2, 16))
-        hlo2 = decode.lower(
-            params_sds,
-            jax.ShapeDtypeStruct((2, 4), jnp.int32),
-            cache_sds,
-            jax.ShapeDtypeStruct((2, 1, 64), jnp.float32),
-            jax.ShapeDtypeStruct((2,), jax.random.key(0).dtype),
-            jax.ShapeDtypeStruct((), jnp.float32)).compile().as_text()
-        ops2 = collective_permute_pairs(hlo2)
-        assert ops2, "expected stage-boundary hops in staged decode"
-        for pairs in ops2:
-            for src, tgt in pairs:
-                assert tgt == src + 1, (src, tgt)
-        print("OK decode hops", ops2)
+        rep2 = contracts.lower_and_check(
+            decode,
+            (params_sds,
+             jax.ShapeDtypeStruct((2, 4), jnp.int32),
+             cache_sds,
+             jax.ShapeDtypeStruct((2, 1, 64), jnp.float32),
+             jax.ShapeDtypeStruct((2,), jax.random.key(0).dtype),
+             jax.ShapeDtypeStruct((), jnp.float32)),
+            contracts.Contract(
+                name="staged-decode-hops",
+                require_collectives=("collective-permute",),
+                permute_rules=(contracts.forward_hop(4),),
+            ))
+        print("OK decode hops", rep2.permute_pairs)
     """)

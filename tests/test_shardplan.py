@@ -541,17 +541,17 @@ def test_averaged_params_runs_mean_before_gather():
 def test_dryrun_shardlocal_delegates_with_identical_hlo_collectives():
     """launch/dryrun's --shard-local mixer is a thin delegator to
     core/shardplan: both construction paths lower to byte-identical
-    collective footprints (launch/hlo_stats accounting), and the shuffle
-    exchanges appear as collective-permute."""
+    collective footprints (analysis.contracts accounting), and the
+    shuffle exchanges appear as collective-permute."""
     out = _run("""
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.analysis import contracts
         from repro.configs.base import ModelConfig
         from repro.core import population as pop, shardplan
         from repro.core.compat import make_mesh
         from repro.core.layer_index import infer_layer_ids, total_layers
         from repro.core.mixing import MixingConfig
-        from repro.launch import hlo_stats
         from repro.launch.dryrun import make_shardlocal_mixer, params_shapes
         from repro.sharding import rules
 
@@ -582,10 +582,10 @@ def test_dryrun_shardlocal_delegates_with_identical_hlo_collectives():
                                                  opt_specs))
         via_core = lower(shardplan.make_shardlocal_mixer(
             mesh, mcfg, cfg.num_layers, pop_specs, opt_specs))
-        b1 = hlo_stats.collective_bytes(via_dryrun.as_text())
-        b2 = hlo_stats.collective_bytes(via_core.as_text())
-        assert b1 == b2, (b1, b2)
-        assert b1["collective-permute"] > 0, b1
-        print("OK delegation, collectives:", b1)
+        f1 = contracts.collective_footprint(via_dryrun)
+        f2 = contracts.collective_footprint(via_core)
+        assert f1 == f2, (f1, f2)
+        assert f1["counts"]["collective-permute"] > 0, f1
+        print("OK delegation, collectives:", f1["bytes"])
         """)
     assert "OK delegation" in out

@@ -1,0 +1,36 @@
+"""Shared argparse scaffolding for the ``tools/`` scripts.
+
+Every tool exposes the same two-symbol surface so
+``tools/check_cli_help.py`` can lint them like the launchers:
+
+* ``build_parser() -> argparse.ArgumentParser`` — the full flag surface,
+  constructed without side effects (no file IO, no jax import);
+* ``main(argv=None) -> int`` — parses with that parser and runs.
+
+:func:`make_parser` builds the parser skeleton from the tool's module
+docstring (first line becomes the ``--help`` description, the ``Usage:``
+block is preserved as the epilog), so the docstring and the CLI cannot
+drift apart.
+"""
+
+from __future__ import annotations
+
+import argparse
+from typing import Optional
+
+
+def make_parser(doc: Optional[str], **kwargs) -> argparse.ArgumentParser:
+    """ArgumentParser seeded from a tool's module docstring: description
+    = first docstring line, epilog = its ``Usage:`` block (if any)."""
+    doc = (doc or "").strip()
+    lines = doc.splitlines()
+    description = lines[0] if lines else None
+    epilog = None
+    for i, line in enumerate(lines):
+        if line.lstrip().lower().startswith("usage"):
+            epilog = "\n".join(lines[i:]).strip()
+            break
+    kwargs.setdefault("description", description)
+    kwargs.setdefault("epilog", epilog)
+    kwargs.setdefault("formatter_class", argparse.RawDescriptionHelpFormatter)
+    return argparse.ArgumentParser(**kwargs)

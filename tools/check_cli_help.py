@@ -1,5 +1,5 @@
 #!/usr/bin/env python
-"""CLI help lint: every flag on every launcher must document itself.
+"""CLI help lint: every flag on every launcher and tool must document itself.
 
 Imports each ``repro.launch`` CLI, captures its ``ArgumentParser`` by
 intercepting ``parse_args`` (no training/serving code ever runs), and
@@ -9,6 +9,10 @@ launchers have.  Also renders each parser's full ``--help`` text, so a
 formatting crash (bad ``%`` escapes and the like) fails CI here instead
 of in a user's terminal.
 
+The ``tools/`` scripts get the same treatment through their shared
+``build_parser()`` surface (``tools/_cli.py``) — no interception needed,
+the parser is constructed directly and side-effect free.
+
 Usage:  PYTHONPATH=src python tools/check_cli_help.py
 """
 
@@ -16,12 +20,26 @@ from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _cli  # noqa: E402
 
 CLI_MODULES = [
     "repro.launch.train",
     "repro.launch.serve",
     "repro.launch.dryrun",
+]
+
+# tools expose build_parser() per tools/_cli.py; importable because this
+# script's own directory leads sys.path
+TOOL_MODULES = [
+    "check_links",
+    "check_metrics_schema",
+    "run_quickstart",
+    "run_analysis",
+    "check_cli_help",
 ]
 
 
@@ -47,26 +65,44 @@ def capture_parser(main) -> argparse.ArgumentParser:
     raise RuntimeError("main() returned without calling parse_args")
 
 
-def main() -> int:
-    failures = []
+def _lint_parser(modname: str, parser: argparse.ArgumentParser,
+                 failures: list) -> int:
+    n_flags = 0
+    for action in parser._actions:
+        if isinstance(action, argparse._HelpAction):
+            continue
+        n_flags += 1
+        name = "/".join(action.option_strings) or action.dest
+        if not action.help or not action.help.strip():
+            failures.append(f"{modname}: {name} has no help text")
+    # formatting must not crash (argparse evaluates %-escapes lazily)
+    parser.format_help()
+    if not parser.description:
+        failures.append(f"{modname}: parser has no description")
+    return n_flags
+
+
+def build_parser() -> argparse.ArgumentParser:
+    return _cli.make_parser(__doc__)
+
+
+def main(argv=None) -> int:
+    build_parser().parse_args(argv)
+    failures: list = []
     n_flags = 0
     for modname in CLI_MODULES:
         mod = importlib.import_module(modname)
-        parser = capture_parser(mod.main)
-        for action in parser._actions:
-            if isinstance(action, argparse._HelpAction):
-                continue
-            n_flags += 1
-            name = "/".join(action.option_strings) or action.dest
-            if not action.help or not action.help.strip():
-                failures.append(f"{modname}: {name} has no help text")
-        # formatting must not crash (argparse evaluates %-escapes lazily)
-        parser.format_help()
+        n_flags += _lint_parser(modname, capture_parser(mod.main), failures)
+    for modname in TOOL_MODULES:
+        mod = importlib.import_module(modname)
+        n_flags += _lint_parser(f"tools/{modname}", mod.build_parser(),
+                                failures)
     if failures:
         print("\n".join(failures), file=sys.stderr)
         print(f"\n{len(failures)} undocumented flag(s)", file=sys.stderr)
         return 1
-    print(f"checked {len(CLI_MODULES)} CLIs, {n_flags} flags documented: OK")
+    print(f"checked {len(CLI_MODULES)} CLIs + {len(TOOL_MODULES)} tools, "
+          f"{n_flags} flags documented: OK")
     return 0
 
 

@@ -16,6 +16,9 @@ import os
 import re
 import sys
 
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _cli  # noqa: E402
+
 # [text](target) — excluding images is pointless, they must exist too
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 SKIP_SCHEMES = ("http://", "https://", "mailto:")
@@ -50,8 +53,15 @@ def check_file(path: str):
     return n_links, broken
 
 
-def main() -> int:
-    root = os.path.abspath(sys.argv[1] if len(sys.argv) > 1 else ".")
+def build_parser():
+    p = _cli.make_parser(__doc__)
+    p.add_argument("root", nargs="?", default=".",
+                   help="repo root to walk for *.md files (default: cwd)")
+    return p
+
+
+def main(argv=None) -> int:
+    root = os.path.abspath(build_parser().parse_args(argv).root)
     n_files = n_links = 0
     failures = []
     for path in sorted(iter_markdown(root)):

@@ -32,9 +32,13 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import re
 import sys
 from typing import Dict, List
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _cli  # noqa: E402
 
 KINDS = {"provenance", "span", "event", "compile", "metric"}
 NAME_RE = re.compile(r"^[a-z0-9_.]+$")
@@ -146,12 +150,16 @@ def check_stream(path: str, require_comm: bool = False) -> List[str]:
     return errors
 
 
-def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+def build_parser() -> argparse.ArgumentParser:
+    ap = _cli.make_parser(__doc__)
     ap.add_argument("paths", nargs="+", help="JSONL event streams to check")
     ap.add_argument("--require-comm", action="store_true",
                     help="fail streams with no train.comm_volume events")
-    args = ap.parse_args(argv)
+    return ap
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
 
     failed = False
     for path in args.paths:

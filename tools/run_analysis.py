@@ -1,0 +1,144 @@
+#!/usr/bin/env python
+"""Run the repo's static-analysis lane: AST lints + the HLO contract matrix.
+
+Two halves (see docs/ANALYSIS.md):
+
+* **Lints** (``repro.analysis.lint``, stdlib-only): tracer-hazard,
+  f32-accumulator, and thread-discipline rules over ``src/repro``, with
+  a checked suppression baseline — every waiver needs a justification,
+  and stale waivers are themselves errors.
+* **Contracts** (``repro.analysis.matrix``, needs jax): lowers the four
+  compiled programs (fused train chunk, pipelined train chunk, scan
+  decode, continuous decode) and asserts their collective footprint,
+  permute topology, donation aliasing, wire dtypes, compile counts, and
+  host-side f64 comm accounting against the optimized HLO.
+
+The contract matrix needs a multi-device host; this script injects
+``--xla_force_host_platform_device_count=8`` into ``XLA_FLAGS`` before
+jax ever loads (jax locks the device count at first init), so it must
+stay the process entry point — don't import it after jax.
+
+Exits non-zero on any lint violation, stale baseline entry, or contract
+violation.
+
+Usage::
+
+    PYTHONPATH=src python tools/run_analysis.py
+    PYTHONPATH=src python tools/run_analysis.py --skip-contracts
+    PYTHONPATH=src python tools/run_analysis.py --entries scan_decode
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+# must precede any (transitive) jax import — the matrix needs the forced
+# multi-device CPU host and jax reads XLA_FLAGS exactly once
+_FORCE = "--xla_force_host_platform_device_count=8"
+if "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") + " " + _FORCE).strip()
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_ROOT = os.path.dirname(_HERE)
+if _HERE not in sys.path:
+    sys.path.insert(0, _HERE)  # running via an absolute path
+for _p in (os.path.join(_ROOT, "src"),):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+import _cli  # noqa: E402
+from repro.analysis import lint  # noqa: E402  (stdlib-only, no jax)
+
+DEFAULT_BASELINE = os.path.join("tools", "analysis_baseline.txt")
+
+# mirrors repro.analysis.matrix.ENTRIES without importing jax at
+# parser-build time; tests/test_analysis.py asserts they stay in sync
+MATRIX_ENTRIES = ("train_chunk", "pipelined_train", "scan_decode",
+                  "continuous_decode")
+
+
+def build_parser():
+    p = _cli.make_parser(__doc__)
+    p.add_argument("--root", default=_ROOT,
+                   help="repo root to lint (default: this checkout)")
+    p.add_argument("--baseline", default=None,
+                   help=f"checked suppression baseline (default: "
+                        f"{DEFAULT_BASELINE} under --root when present)")
+    p.add_argument("--rules", nargs="+", choices=lint.RULES, default=None,
+                   help="restrict lints to these rules (default: all)")
+    p.add_argument("--entries", nargs="+", choices=MATRIX_ENTRIES,
+                   default=None,
+                   help="restrict the contract matrix to these entries "
+                        "(default: all four)")
+    p.add_argument("--skip-lint", action="store_true",
+                   help="skip the AST lints")
+    p.add_argument("--skip-contracts", action="store_true",
+                   help="skip the HLO contract matrix (no jax import)")
+    return p
+
+
+def _run_lints(args) -> int:
+    violations = lint.lint_tree(args.root)
+    if args.rules:
+        violations = [v for v in violations if v.rule in args.rules]
+    baseline_path = args.baseline
+    if baseline_path is None:
+        cand = os.path.join(args.root, DEFAULT_BASELINE)
+        baseline_path = cand if os.path.exists(cand) else None
+    stale = []
+    if baseline_path:
+        try:
+            baseline = lint.load_baseline(baseline_path)
+        except (OSError, ValueError) as e:
+            print(f"analysis: bad baseline: {e}", file=sys.stderr)
+            return 1
+        violations, stale = lint.apply_baseline(violations, baseline)
+        if args.rules:
+            stale = [k for k in stale if k.split(":", 1)[0] in args.rules]
+    for v in violations:
+        print(f"{v.path}:{v.line}: [{v.rule}] {v.message}", file=sys.stderr)
+    for k in stale:
+        print(f"stale baseline entry (matches nothing, remove it): {k}",
+              file=sys.stderr)
+    n = len(violations) + len(stale)
+    if n:
+        print(f"analysis: lint FAILED ({len(violations)} violation(s), "
+              f"{len(stale)} stale waiver(s))", file=sys.stderr)
+        return 1
+    print("analysis: lint OK "
+          f"(rules: {', '.join(args.rules or lint.RULES)})")
+    return 0
+
+
+def _run_contracts(args) -> int:
+    from repro.analysis import contracts, matrix
+
+    assert matrix.ENTRIES == MATRIX_ENTRIES, \
+        "update MATRIX_ENTRIES to match repro.analysis.matrix.ENTRIES"
+    entries = tuple(args.entries) if args.entries else None
+    try:
+        results = matrix.run_matrix(entries)
+    except contracts.ContractViolation as e:
+        print(f"analysis: contract matrix FAILED\n{e}", file=sys.stderr)
+        return 1
+    for name, r in results.items():
+        print(f"analysis: contract {name} OK (compiles={r['compiles']})")
+    return 0
+
+
+def main(argv=None) -> int:
+    args = build_parser().parse_args(argv)
+    rc = 0
+    if not args.skip_lint:
+        rc |= _run_lints(args)
+    if not args.skip_contracts:
+        rc |= _run_contracts(args)
+    if rc == 0:
+        print("analysis: OK")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

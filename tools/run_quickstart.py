@@ -18,6 +18,9 @@ import subprocess
 import sys
 import time
 
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import _cli  # noqa: E402
+
 
 def extract_commands(readme: str):
     m = re.search(r"<!-- quickstart-begin -->(.*?)<!-- quickstart-end -->",
@@ -37,8 +40,15 @@ def extract_commands(readme: str):
     return commands
 
 
-def main() -> int:
-    path = sys.argv[1] if len(sys.argv) > 1 else "README.md"
+def build_parser():
+    p = _cli.make_parser(__doc__)
+    p.add_argument("readme", nargs="?", default="README.md",
+                   help="README to extract the quickstart fences from")
+    return p
+
+
+def main(argv=None) -> int:
+    path = build_parser().parse_args(argv).readme
     root = os.path.dirname(os.path.abspath(path)) or "."
     with open(path, encoding="utf-8") as f:
         commands = extract_commands(f.read())
