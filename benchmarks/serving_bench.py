@@ -36,6 +36,25 @@ Rows (CSV via benchmarks/run.py, mirrored into
                           TTFT over all requests AND over the shorts
                           alone — the latter is the SLO number chunking
                           exists to fix.
+  serve_ensemble_paged    ensemble mode through the continuous runtime:
+                          every emitted token pays one vmapped N-member
+                          decode step — the baseline the speculative row
+                          races.
+  serve_speculative       population-powered speculative decode: the
+                          soup drafts ``draft_k`` tokens, the ensemble
+                          verifies all of them in ONE batched step.  The
+                          bench population stacks ONE member N times —
+                          the limit case of WASH's members sharing a
+                          basin — so the accept rate is deterministically
+                          1.0 and the row isolates the mechanism: k
+                          tokens per ensemble dispatch instead of one.
+                          Real WASH populations sit below that ceiling;
+                          the accept-rate column is the number to watch.
+  serve_quantized_kv      the soup continuous server with int8 paged KV
+                          (per-page symmetric scales): tokens/sec plus
+                          the capacity ledger — pages per GB vs fp32 at
+                          fixed HBM, measured from the live pools' actual
+                          nbytes, not a formula.
 
 Steady-state rows (oldloop/scan/member/ensemble) exclude compile; the two
 mixed-stream rows are cold on purpose; the driver rows are warmed (their
@@ -45,9 +64,11 @@ by the engines' counters, not inferred.  ``--smoke`` runs the CI
 fast-lane guard: tiny config, assert the scan path compiled decode
 exactly once, the continuous runtime compiled decode exactly once for
 the whole stream, continuous beat static on the mixed stream, chunked
-beat whole-prompt on the shorts' tail TTFT, and a resubmitted prompt's
+beat whole-prompt on the shorts' tail TTFT, a resubmitted prompt's
 suffix-only prefill skipped its LRU-cached prefix pages (FLOP accounting
-by the server's own token counters) — then still emits the JSON.
+by the server's own token counters), speculative decode accepted every
+draft AND out-threw the plain paged ensemble, and int8 KV fit >3x the
+fp32 page count at fixed HBM — then still emits the JSON.
 """
 
 from __future__ import annotations
@@ -183,6 +204,63 @@ def _run_driver(cfg, soup, chunk, quick: bool = True, page_size: int = 8):
     return summarize(metrics), summarize(shorts), server, dt
 
 
+def _spec_workload(cfg, quick: bool = True):
+    """Decode-heavy traffic for the ensemble-vs-speculative race: short
+    prompts, long generations — the regime speculation targets (a
+    prefill-bound stream pays the same prefill either way and would just
+    dilute the decode-side difference being measured)."""
+    import numpy as np
+
+    from repro.serving import batching
+
+    rng = np.random.default_rng(11)
+    n, S, max_new = (8, 12, 24) if quick else (16, 24, 64)
+    return [batching.Request(f"spec{i}",
+                             rng.integers(0, cfg.vocab_size, (S,)).astype(np.int32),
+                             max_new)
+            for i in range(n)]
+
+
+def _run_population(cfg, stacked, reqs_fn, speculative: bool,
+                    draft_k: int = 4, page_size: int = 8):
+    """(summary, server, seconds) for an ensemble-mode continuous server —
+    plain or speculative — timed warm through the async driver so the
+    tok/s and TTFT numbers measure decode scheduling, not tracing.
+    ``max_pages_per_slot`` is sized to the workload: the paged attend
+    gathers every table column, so a sloppy width taxes the verify
+    step's B·k rows fourfold."""
+    import time as _time
+
+    from repro.serving import batching
+    from repro.serving.driver import RequestDriver, summarize
+
+    def serve():
+        reqs = reqs_fn()
+        per_slot = max(-(-(len(r.tokens) + r.max_new) // page_size)
+                       for r in reqs)
+        server = batching.ContinuousServer(
+            stacked, cfg, mode="ensemble", page_size=page_size,
+            max_slots=len(reqs), num_pages=len(reqs) * per_slot + 8,
+            max_pages_per_slot=per_slot,
+            speculative=speculative, draft_k=draft_k)
+        driver = RequestDriver(server)
+        t0 = _time.perf_counter()
+        metrics = driver.run(reqs)
+        return summarize(metrics), server, _time.perf_counter() - t0
+
+    serve()                                              # warm compiles
+    return serve()
+
+
+def _pool_bytes(server) -> int:
+    """Live nbytes of the server's verify KV pools (int8 pools are dicts
+    holding the quantized pages plus their per-page f32 scales — the
+    scales are part of the footprint and are counted)."""
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(
+                   (server._k_pool, server._v_pool)))
+
+
 def run(quick: bool = True):
     from repro.serving import engine as serving
 
@@ -305,6 +383,74 @@ def run(quick: bool = True):
             results["serve_driver_chunked"]["resubmit_suffix_tokens"] = suffix
             results["serve_driver_chunked"]["resubmit_prompt_tokens"] = len(re_prompt)
 
+    # --- population speculative decode vs plain ensemble, paged runtime --
+    import jax.numpy as jnp
+
+    # the limit case of WASH's same-basin population: ONE member stacked
+    # N times, so the soup's argmax always agrees with the ensemble's and
+    # the accept rate is deterministically 1.0 — the row isolates the
+    # mechanism (k emitted tokens per ensemble dispatch instead of one);
+    # trained populations land below this ceiling, which is why the
+    # accept_rate column is reported rather than assumed
+    member0 = jax.tree_util.tree_map(lambda x: x[0], popn)
+    ident = jax.tree_util.tree_map(lambda x: jnp.stack([x] * 4), member0)
+    draft_k = 4
+
+    def reqs_fn():
+        return _spec_workload(cfg, quick)
+
+    ens_sum, ens_server, ens_dt = _run_population(cfg, ident, reqs_fn, False)
+    est = ens_server.stats
+    add("serve_ensemble_paged", ens_dt * 1e6,
+        {"tok_s": ens_sum["tokens_per_s"], "members": 4,
+         "decode_steps": est["decode_steps"],
+         "ttft_p99_ms": ens_sum["ttft_p99_ms"]})
+
+    spec_sum, spec_server, spec_dt = _run_population(
+        cfg, ident, reqs_fn, True, draft_k=draft_k)
+    sst = spec_server.stats
+    accept = sst["spec_accepted"] / max(sst["spec_drafted"], 1)
+    add("serve_speculative", spec_dt * 1e6,
+        {"tok_s": spec_sum["tokens_per_s"], "members": 4,
+         "draft_k": draft_k, "accept_rate": accept,
+         "drafted": sst["spec_drafted"], "accepted": sst["spec_accepted"],
+         "decode_steps": sst["decode_steps"],
+         "ttft_p99_ms": spec_sum["ttft_p99_ms"],
+         "speedup_vs_ensemble":
+             spec_sum["tokens_per_s"] / ens_sum["tokens_per_s"]})
+
+    # --- quantized paged KV: int8 capacity at fixed HBM -------------------
+    import time as _time
+
+    ps_q = 4 if quick else 16
+    reqs_q = _mixed_stream(cfg, n_req, max_prompt=prompt, max_new=max_new,
+                           seed=1)
+    max_pages_q = max(-(-(len(r.tokens) + r.max_new) // ps_q)
+                      for r in reqs_q)
+    q_server = batching.ContinuousServer(
+        soup, cfg, page_size=ps_q, max_slots=4,
+        num_pages=4 * max_pages_q + 8, max_pages_per_slot=max_pages_q,
+        kv_dtype="int8")
+    t0 = _time.perf_counter()
+    q_out = q_server.run(reqs_q)
+    q_s = _time.perf_counter() - t0
+    assert len(q_out) == len(reqs_q)
+    # capacity from LIVE pools' nbytes (int8 counts its scales) at
+    # IDENTICAL geometry: a fresh fp32 sibling server, not an earlier
+    # row's server whose page size differs
+    ref_server = batching.ContinuousServer(
+        soup, cfg, page_size=ps_q, max_slots=4,
+        num_pages=q_server.num_pages, max_pages_per_slot=max_pages_q)
+    per_page_fp32 = _pool_bytes(ref_server) / ref_server.num_pages
+    per_page_int8 = _pool_bytes(q_server) / q_server.num_pages
+    add("serve_quantized_kv", q_s * 1e6,
+        {"tok_s": stream_toks / q_s,
+         "kv_bytes_per_page_fp32": per_page_fp32,
+         "kv_bytes_per_page_int8": per_page_int8,
+         "capacity_ratio": per_page_fp32 / per_page_int8,
+         "pages_per_gb_int8": int(2 ** 30 / per_page_int8),
+         "pages_per_gb_fp32": int(2 ** 30 / per_page_fp32)})
+
     # --- telemetry overhead: same driver workload, obs on vs off ---------
     from repro import obs
 
@@ -394,6 +540,31 @@ def smoke() -> None:
         f"prefilled {chunked['resubmit_suffix_tokens']} of "
         f"{chunked['resubmit_prompt_tokens']} with "
         f"{chunked['resubmit_prefix_reused']} reused"
+    )
+    ens = results["serve_ensemble_paged"]
+    spec = results["serve_speculative"]
+    # identical-member population + greedy => the soup's draft always
+    # matches the ensemble's verify: the accept rate must be exactly 1
+    # (any miss means the draft/verify sampling paths diverged)
+    assert spec["accept_rate"] >= 0.999, (
+        f"identical-member greedy population must accept every draft, "
+        f"got accept_rate={spec['accept_rate']:.3f} "
+        f"({spec['accepted']}/{spec['drafted']})"
+    )
+    assert spec["decode_steps"] < ens["decode_steps"], (
+        f"speculation must emit multiple tokens per ensemble dispatch "
+        f"(spec {spec['decode_steps']} steps vs plain {ens['decode_steps']})"
+    )
+    assert spec["tok_s"] > ens["tok_s"], (
+        f"speculative decode ({spec['tok_s']:.0f} tok/s) must beat the "
+        f"plain paged ensemble ({ens['tok_s']:.0f} tok/s) at accept~1"
+    )
+    quant = results["serve_quantized_kv"]
+    # int8 pages carry a per-page f32 scale, so the ratio sits just under
+    # the dtype's 4x; anything <= 3 means the pools aren't quantized
+    assert quant["capacity_ratio"] > 3.0, (
+        f"int8 paged KV must fit >3x the pages of fp32 at fixed HBM, "
+        f"got {quant['capacity_ratio']:.2f}x"
     )
     overhead = results["serve_obs_overhead"]["overhead_ratio"]
     # registry observes are a handful of dict ops per decode step; the

@@ -1,7 +1,7 @@
 """The shipped contract matrix: one :class:`~repro.analysis.contracts.Contract`
 per compiled program the repo actually runs.
 
-Four programs, four entries:
+Five programs, five entries:
 
 ``train_chunk``
     The fused single-axis train chunk (``train.engine.make_fused_chunk_fn``
@@ -31,8 +31,16 @@ Four programs, four entries:
     aliased, compiled once per pool geometry across an entire mixed
     request stream — and reused by a second server on the same geometry.
 
+``speculative_decode``
+    The speculative decode step (``serving.speculative`` via
+    ``serving.batching._build_spec_decode``): no collectives, all FOUR
+    paged KV pools — verify k/v (arguments 2 and 3) AND draft k/v
+    (arguments 4 and 5) — donated and aliased, compiled once per
+    (geometry, ``draft_k``); a server with a different ``draft_k`` adds
+    exactly one trace.
+
 Each ``check_*`` raises :class:`~repro.analysis.contracts.ContractViolation`
-on the first broken clause; :func:`run_matrix` runs all four and
+on the first broken clause; :func:`run_matrix` runs every entry and
 aggregates.  The matrix needs a forced multi-device CPU host
 (``XLA_FLAGS=--xla_force_host_platform_device_count=8``) — jax locks the
 device count at first init, so ``tools/run_analysis.py`` sets the flag
@@ -63,7 +71,7 @@ from repro.optim import make_optimizer
 from repro.sharding import rules as sharding_rules
 
 ENTRIES = ("train_chunk", "pipelined_train", "scan_decode",
-           "continuous_decode")
+           "continuous_decode", "speculative_decode")
 
 # (ens=2, pipe=2) plus the 8-device CI lane test_pipeline already forces
 REQUIRED_DEVICES = 4
@@ -427,6 +435,83 @@ def check_continuous_decode() -> Dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
+# entry 5: speculative decode step (draft + batched verify)
+# ---------------------------------------------------------------------------
+
+
+def check_speculative_decode() -> Dict[str, Any]:
+    """Speculative decode step: collective-free, donation honored on all
+    four paged KV pools (verify args 2–3, draft args 4–5), one executable
+    per (pool geometry, ``draft_k``) across a whole speculative stream —
+    and a server with a different ``draft_k`` adds exactly one trace."""
+    from repro.models import layers as L
+    from repro.models import transformer as M
+    from repro.serving import batching
+
+    cfg = ModelConfig(name="tiny", d_model=32, d_ff=64, num_layers=2,
+                      num_heads=4, num_kv_heads=2, vocab_size=50,
+                      max_position=128)
+    page_size, max_slots, num_pages, draft_k = 4, 3, 32, 3
+
+    params_sds = jax.eval_shape(lambda: M.init_params(jax.random.key(0), cfg))
+    pools_sds = jax.eval_shape(
+        lambda: L.paged_pools_init(cfg, num_pages, page_size,
+                                   cfg.num_layers))
+    key_dtype = jax.eval_shape(lambda: jax.random.key(0)).dtype
+    B = max_slots
+    args = (
+        params_sds, params_sds,                        # verify + draft (soup)
+        pools_sds["k"], pools_sds["v"],                # verify pools
+        pools_sds["k"], pools_sds["v"],                # draft pools
+        jax.ShapeDtypeStruct((B,), jnp.int32),         # tokens
+        jax.ShapeDtypeStruct((B,), jnp.int32),         # positions
+        jax.ShapeDtypeStruct((B,), jnp.int32),         # steps
+        jax.ShapeDtypeStruct((B,), jnp.int32),         # budgets
+        jax.ShapeDtypeStruct((B,), jnp.bool_),         # active
+        jax.ShapeDtypeStruct((B, num_pages), jnp.int32),
+        jax.ShapeDtypeStruct((B,), key_dtype),
+        jax.ShapeDtypeStruct((), jnp.float32),
+    )
+    program = batching._build_spec_decode(cfg, False, True, False, draft_k)
+    contract = Contract(
+        name="speculative_decode",
+        forbid_collectives=_COLLECTIVES,
+        donate_argnums=(2, 3, 4, 5),
+    )
+    report = contracts.lower_and_check(program, args, contract)
+
+    # one executable per (geometry, draft_k) for a whole speculative
+    # stream; a different draft_k is a new program — exactly one more
+    batching.reset_trace_counts()
+    batching.clear_executable_cache()
+    params = M.init_params(jax.random.key(0), cfg)
+    reqs = [batching.Request(uid=i, tokens=list(range(1, 1 + s)), max_new=m)
+            for i, (s, m) in enumerate([(5, 6), (9, 3), (3, 8), (7, 5)])]
+    server = batching.ContinuousServer(
+        params, cfg, temperature=0.0, page_size=page_size,
+        max_slots=max_slots, num_pages=num_pages,
+        speculative=True, draft_k=draft_k)
+    server.run(reqs)
+    check_compile_count("speculative_decode-compiles-per-geometry",
+                        batching.decode_trace_count(), 1)
+    server2 = batching.ContinuousServer(
+        params, cfg, temperature=0.0, page_size=page_size,
+        max_slots=max_slots, num_pages=num_pages,
+        speculative=True, draft_k=draft_k)
+    server2.run([batching.Request(uid=90, tokens=[1, 2, 3], max_new=4)])
+    check_compile_count("speculative_decode-compiles-reuse",
+                        batching.decode_trace_count(), 1)
+    server3 = batching.ContinuousServer(
+        params, cfg, temperature=0.0, page_size=page_size,
+        max_slots=max_slots, num_pages=num_pages,
+        speculative=True, draft_k=draft_k + 2)
+    server3.run([batching.Request(uid=91, tokens=[1, 2, 3], max_new=4)])
+    check_compile_count("speculative_decode-compiles-new-draft-k",
+                        batching.decode_trace_count(), 2)
+    return {"hlo": report, "compiles": batching.decode_trace_count()}
+
+
+# ---------------------------------------------------------------------------
 # runner
 # ---------------------------------------------------------------------------
 
@@ -435,6 +520,7 @@ _CHECKS: Dict[str, Callable[[], Dict[str, Any]]] = {
     "pipelined_train": check_pipelined_train,
     "scan_decode": check_scan_decode,
     "continuous_decode": check_continuous_decode,
+    "speculative_decode": check_speculative_decode,
 }
 
 

@@ -49,7 +49,9 @@ def rwkv6_scan(r, k, v, w, u, chunk: int = 16, interpret=None):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def paged_attention(q, k_pool, v_pool, page_table, lengths, interpret=None):
+def paged_attention(q, k_pool, v_pool, page_table, lengths,
+                    k_scale=None, v_scale=None, interpret=None):
     return paged_attention_pallas(
-        q, k_pool, v_pool, page_table, lengths, interpret=interpret
+        q, k_pool, v_pool, page_table, lengths,
+        k_scale=k_scale, v_scale=v_scale, interpret=interpret,
     )

@@ -43,12 +43,24 @@ NEG_INF = -1e30
 
 
 def _paged_kernel(
-    pt_ref, len_ref,          # scalar-prefetch: (B, max_pages) int32, (B,) int32
-    q_ref, k_ref, v_ref,      # (g, hd), (page_size, hd), (page_size, hd)
-    o_ref,                    # (g, hd)
-    acc_ref, m_ref, l_ref,    # VMEM scratch: (g, hd), (g, 1), (g, 1)
-    *, kv: int, page_size: int, scale: float,
+    *refs,
+    kv: int, page_size: int, scale: float, quantized: bool,
 ):
+    # scalar-prefetch refs lead: pt (B, max_pages) i32, lengths (B,) i32,
+    # then — quantized pools only — per-slot-per-page dequant scales
+    # ks/vs (B, max_pages) f32 (pre-gathered through the page table, so
+    # the kernel never indexes the (P,) scale vectors itself)
+    if quantized:
+        pt_ref, len_ref, ks_ref, vs_ref = refs[:4]
+        refs = refs[4:]
+    else:
+        pt_ref, len_ref = refs[:2]
+        ks_ref = vs_ref = None
+        refs = refs[2:]
+    q_ref, k_ref, v_ref = refs[:3]   # (g, hd), (page_size, hd), (page_size, hd)
+    o_ref = refs[3]                  # (g, hd)
+    acc_ref, m_ref, l_ref = refs[4:]  # VMEM scratch: (g, hd), (g, 1), (g, 1)
+
     j = pl.program_id(1)
     b = pl.program_id(0) // kv
     length = len_ref[b]
@@ -66,6 +78,8 @@ def _paged_kernel(
         g = q_ref.shape[0]
         q = q_ref[...].astype(jnp.float32) * scale
         k = k_ref[...].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[b, j]
         scores = q @ k.T  # (g, page_size)
         tpos = j * page_size + jax.lax.broadcasted_iota(
             jnp.int32, (g, page_size), 1
@@ -76,7 +90,10 @@ def _paged_kernel(
         alpha = jnp.exp(m_prev - m_new)
         p = jnp.exp(scores - m_new)
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
-        acc_ref[...] = acc_ref[...] * alpha + p @ v_ref[...].astype(jnp.float32)
+        vpage = v_ref[...].astype(jnp.float32)
+        if quantized:
+            vpage = vpage * vs_ref[b, j]
+        acc_ref[...] = acc_ref[...] * alpha + p @ vpage
         m_ref[...] = m_new
 
     @pl.when(j == pl.num_programs(1) - 1)
@@ -93,6 +110,8 @@ def paged_attention_pallas(
     page_table: jax.Array,
     lengths: jax.Array,
     *,
+    k_scale: Optional[jax.Array] = None,
+    v_scale: Optional[jax.Array] = None,
     interpret: Optional[bool] = None,
 ) -> jax.Array:
     """One-token paged attention for a batch of serving slots.
@@ -103,6 +122,11 @@ def paged_attention_pallas(
       page_table : (B, max_pages) int32 — pool page id per logical page
                    (unused tail entries may point anywhere; they are masked)
       lengths    : (B,) int32 — valid context tokens per slot (>= 1)
+      k_scale /
+      v_scale    : (P,) float32, optional — per-page dequant scales for
+                   int8 pools (``models.layers.paged_pools_init`` with
+                   ``kv_dtype="int8"``); pages are read as
+                   ``pool[p] * scale[p]``.  Both or neither.
 
     Returns (B, H, hd).  GQA: ``H % KV == 0``; queries are grouped by kv
     head exactly as :func:`repro.models.layers.sdpa` groups them.
@@ -112,36 +136,49 @@ def paged_attention_pallas(
     max_pages = page_table.shape[1]
     g = H // KV
     scale = hd ** -0.5
+    quantized = k_scale is not None
+    if quantized != (v_scale is not None):
+        raise ValueError("pass both k_scale and v_scale, or neither")
 
     qh = q.reshape(B * KV, g, hd)
+    pt = page_table.astype(jnp.int32)
     kernel = functools.partial(
-        _paged_kernel, kv=KV, page_size=page_size, scale=scale
+        _paged_kernel, kv=KV, page_size=page_size, scale=scale,
+        quantized=quantized,
     )
+    # quantized pools prepend two more scalar-prefetch operands (dequant
+    # scales pre-gathered to (B, max_pages)); index-map lambdas take one
+    # trailing arg per prefetch operand
+    n_pref = 4 if quantized else 2
+    def _q_map(h, j, *pref):
+        return (h, 0, 0)
+
+    def _page_map(h, j, *pref):
+        return (pref[0][h // KV, j], 0, h % KV, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=2,
+        num_scalar_prefetch=n_pref,
         grid=(B * KV, max_pages),
         in_specs=[
-            pl.BlockSpec((None, g, hd), lambda h, j, pt, ln: (h, 0, 0)),
-            pl.BlockSpec(
-                (None, page_size, None, hd),
-                lambda h, j, pt, ln: (pt[h // KV, j], 0, h % KV, 0),
-            ),
-            pl.BlockSpec(
-                (None, page_size, None, hd),
-                lambda h, j, pt, ln: (pt[h // KV, j], 0, h % KV, 0),
-            ),
+            pl.BlockSpec((None, g, hd), _q_map),
+            pl.BlockSpec((None, page_size, None, hd), _page_map),
+            pl.BlockSpec((None, page_size, None, hd), _page_map),
         ],
-        out_specs=pl.BlockSpec((None, g, hd), lambda h, j, pt, ln: (h, 0, 0)),
+        out_specs=pl.BlockSpec((None, g, hd), _q_map),
         scratch_shapes=[
             pltpu.VMEM((g, hd), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
             pltpu.VMEM((g, 1), jnp.float32),
         ],
     )
+    prefetch = (pt, lengths.astype(jnp.int32))
+    if quantized:
+        prefetch += (k_scale[pt].astype(jnp.float32),
+                     v_scale[pt].astype(jnp.float32))
     out = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B * KV, g, hd), q.dtype),
         interpret=resolve_interpret(interpret),
-    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), qh, k_pool, v_pool)
+    )(*prefetch, qh, k_pool, v_pool)
     return out.reshape(B, H, hd)

@@ -34,7 +34,8 @@ def flash_attention_ref(q, k, v, *, causal=True, window=None) -> jax.Array:
     return out.reshape(B, S, H, hd).astype(q.dtype)
 
 
-def paged_attention_ref(q, k_pool, v_pool, page_table, lengths) -> jax.Array:
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths,
+                        k_scale=None, v_scale=None) -> jax.Array:
     """Gather-then-attend oracle for the paged decode kernel.
 
     q: (B,H,hd); k_pool/v_pool: (P,page_size,KV,hd);
@@ -43,12 +44,22 @@ def paged_attention_ref(q, k_pool, v_pool, page_table, lengths) -> jax.Array:
     Materializes each slot's context contiguously (the two-pass form the
     kernel fuses away) and applies a plain masked softmax — same grouping
     and float32 reductions as ``models.layers.sdpa``.
+
+    ``k_scale``/``v_scale`` (``(P,)`` float32, optional) dequantize int8
+    pools: page ``p``'s rows are read as ``pool[p] * scale[p]`` — the
+    per-page symmetric scheme of ``models.layers.paged_pools_init``.
     """
     B, H, hd = q.shape
     _, page_size, KV, _ = k_pool.shape
     g = H // KV
     k = k_pool[page_table].reshape(B, -1, KV, hd)  # (B, max_pages*ps, KV, hd)
     v = v_pool[page_table].reshape(B, -1, KV, hd)
+    if k_scale is not None:
+        ps = jnp.repeat(k_scale[page_table], page_size, axis=1)  # (B, ctx)
+        k = k.astype(jnp.float32) * ps[:, :, None, None]
+    if v_scale is not None:
+        ps = jnp.repeat(v_scale[page_table], page_size, axis=1)
+        v = v.astype(jnp.float32) * ps[:, :, None, None]
     qf = q.reshape(B, KV, g, hd).astype(jnp.float32)
     scores = jnp.einsum("bkgh,bskh->bkgs", qf, k.astype(jnp.float32)) / (hd ** 0.5)
     valid = jnp.arange(k.shape[1]) < lengths[:, None]  # (B, ctx)

@@ -158,7 +158,8 @@ def _serve_continuous(popn, cfg, args):
         popn, cfg, mode=args.mode, member=args.member,
         temperature=args.temperature, page_size=args.page_size,
         max_slots=args.max_slots, num_pages=args.num_pages,
-        max_pages_per_slot=max_pages,
+        max_pages_per_slot=max_pages, speculative=args.speculative,
+        draft_k=args.draft_k, kv_dtype=args.kv_dtype,
     )
     reqs = mixed_stream(cfg, args.requests, args.seq_len, args.max_new,
                         args.seed, args.temperature)
@@ -170,13 +171,18 @@ def _serve_continuous(popn, cfg, args):
     st = server.stats
     print(f"continuous mode={args.mode} requests={len(reqs)} "
           f"slots={args.max_slots} page_size={args.page_size} "
-          f"pool={args.num_pages}")
+          f"pool={args.num_pages} kv_dtype={args.kv_dtype or 'param'}")
     print(f"  {toks / dt:9.1f} tok/s  ({dt:.2f}s stream, "
           f"{st['decode_steps']} decode steps, "
           f"decode traces {batching.decode_trace_count()}, "
           f"prefill traces {batching.prefill_trace_count()})")
     print(f"  pages: allocated {st['pages_allocated']}, "
           f"shared {st['pages_shared']}, peak {st['peak_pages_in_use']}")
+    if args.speculative:
+        drafted = max(st["spec_drafted"], 1)
+        print(f"  speculative draft_k={args.draft_k}: accepted "
+              f"{st['spec_accepted']}/{st['spec_drafted']} drafts "
+              f"({st['spec_accepted'] / drafted:.0%})")
     assert len(out) == len(reqs)
     return out
 
@@ -195,6 +201,8 @@ def _serve_driver(popn, cfg, args):
         temperature=args.temperature, page_size=args.page_size,
         max_slots=args.max_slots, num_pages=args.num_pages,
         max_pages_per_slot=max_pages, retain_pages=args.retain_pages,
+        speculative=args.speculative, draft_k=args.draft_k,
+        kv_dtype=args.kv_dtype,
     )
     reqs = mixed_stream(cfg, args.requests, args.seq_len, args.max_new,
                         args.seed, args.temperature, share_prefix_every=4)
@@ -295,6 +303,18 @@ def main(argv=None):
                     help="driver: prefill at most this many prompt tokens "
                          "per tick, interleaved with decode steps "
                          "(0 = whole remaining suffix in one program)")
+    ap.add_argument("--speculative", action="store_true",
+                    help="continuous/driver: population-powered speculative "
+                         "decoding — the soup drafts --draft-k tokens per "
+                         "step, the ensemble verifies them in one batched "
+                         "step (bitwise the plain path at fp32 KV)")
+    ap.add_argument("--draft-k", type=int, default=4,
+                    help="speculative draft length (tokens proposed per "
+                         "decode call; one executable per distinct value)")
+    ap.add_argument("--kv-dtype", default=None, choices=["int8"],
+                    help="quantize the paged KV pools (int8, one scale per "
+                         "page — double the effective pool capacity; "
+                         "default: the model's param dtype, bitwise)")
     ap.add_argument("--retain-pages", action="store_true",
                     help="driver: keep refcount-0 prefix pages on an LRU "
                          "list (evicted only under pool pressure) so "
@@ -322,6 +342,11 @@ def main(argv=None):
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if (args.speculative or args.kv_dtype) and not (args.continuous
+                                                    or args.driver):
+        ap.error("--speculative/--kv-dtype are continuous-runtime knobs; "
+                 "add --continuous or --driver")
+
     key = jax.random.key(args.seed)
     if args.temperature > 0.0:
         sample_key = jax.random.fold_in(key, 999)

@@ -361,9 +361,22 @@ def gqa_decode(p, cfg: ModelConfig, x, cache_l, pos):
 
 # -- paged KV cache (continuous-batching serving) ---------------------------
 
+#: supported storage dtypes for the paged pools: None = the model's param
+#: dtype (the bitwise-exact path); "int8" = per-page symmetric quantization
+#: with a float32 scale per (layer, page), halving pool HBM
+KV_DTYPES = (None, "int8")
+
+#: adaptive page scales start here and only ever grow (monotone), so a
+#: page's already-written rows are rescaled at most once per scale bump
+KV_SCALE_FLOOR = 1e-8
+
+#: page 0 (the runtime's scratch page) keeps this scale FOREVER: masked
+#: garbage writes from inactive slots must never adapt quantization state
+KV_SCRATCH_SCALE = 1.0
+
 
 def paged_pools_init(cfg: ModelConfig, num_pages: int, page_size: int,
-                     num_layers: int):
+                     num_layers: int, kv_dtype: str = None):
     """Block-pool KV cache: ``num_pages`` shared fixed-size pages per layer.
 
     Layout ``(num_layers, num_pages, page_size, KV, hd)`` — the per-slot
@@ -371,11 +384,120 @@ def paged_pools_init(cfg: ModelConfig, num_pages: int, page_size: int,
     slots with different context lengths share one allocation and common
     prompt prefixes can share pages (``repro.serving.batching`` owns the
     table/refcount bookkeeping).  Page 0 is reserved by the runtime as a
-    scratch page for inactive slots."""
+    scratch page for inactive slots.
+
+    ``kv_dtype=None`` stores pages in the model's param dtype (bitwise
+    path).  ``kv_dtype="int8"`` stores each pool as
+    ``{"q": int8 (L, P, page_size, KV, hd), "scale": f32 (L, P)}`` — one
+    symmetric scale per (layer, page), written by
+    :func:`paged_store_rows` / :func:`paged_store_chunk` and applied at
+    read time inside both paged attends.  Page 0's scale is pinned to
+    :data:`KV_SCRATCH_SCALE` and never adapts."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype={kv_dtype!r}; expected one of {KV_DTYPES}")
     hd = cfg.resolved_head_dim
-    dtype = param_dtype(cfg)
     shape = (num_layers, num_pages, page_size, cfg.num_kv_heads, hd)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kv_dtype is None:
+        dtype = param_dtype(cfg)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    scale = jnp.full((num_layers, num_pages), KV_SCALE_FLOOR, jnp.float32)
+    scale = scale.at[:, 0].set(KV_SCRATCH_SCALE)
+    pool = {"q": jnp.zeros(shape, jnp.int8), "scale": scale}
+    return {"k": pool, "v": jax.tree_util.tree_map(lambda x: x, pool)}
+
+
+def kv_quantize(x, scale):
+    """Symmetric int8 quantization of ``x`` under per-page ``scale``
+    (broadcast against x's leading axes)."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def kv_dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def kv_page_scale(x, floor: float = None):
+    """The smallest symmetric-int8 scale covering ``x`` (amax / 127)."""
+    floor = KV_SCALE_FLOOR if floor is None else floor
+    return jnp.maximum(jnp.max(jnp.abs(x)) / 127.0, floor)
+
+
+def paged_store_rows(pool, page_idx, offset, rows):
+    """Write one (KV, hd) row per batch entry into ``pool`` at
+    ``(page_idx[b], offset[b])`` — the decode-step scatter.
+
+    For plain pools this is the raw ``.at[].set``.  For int8 pools the
+    written pages' scales grow monotonically to cover the new rows
+    (``max(old, amax(row)/127)``): untouched pages keep their bits, and a
+    page whose scale does not change keeps its already-written rows
+    bit-identical (the rescale ratio is exactly 1.0).  Page 0 (scratch)
+    never adapts — its scale stays :data:`KV_SCRATCH_SCALE`.
+
+    ``page_idx`` MAY contain duplicates (the speculative verify step
+    scatters several rows of one slot — often one page — in a single
+    call): scales merge through a scatter-max, every duplicate gathers
+    the same pre-step page bits and rescales them identically, and the
+    new rows land via a per-``(page, offset)`` scatter whose index pairs
+    are distinct for live rows."""
+    if not isinstance(pool, dict):
+        return pool.at[page_idx, offset].set(rows.astype(pool.dtype))
+    q, scale = pool["q"], pool["scale"]
+    rows = rows.astype(jnp.float32)                       # (B, KV, hd)
+    row_amax = jnp.max(jnp.abs(rows), axis=(1, 2))        # (B,)
+    s_new = scale.at[page_idx].max(row_amax / 127.0)      # (P,) dup-safe
+    s_new = s_new.at[0].set(KV_SCRATCH_SCALE)
+    # rescale the touched pages' existing bits; duplicates gather the same
+    # old page and the same (s_old/s_new) ratio, so their scatter-back
+    # writes are identical and any winner is correct
+    ratio = (scale / s_new)[page_idx]                     # (B,)
+    pages = jnp.round(q[page_idx].astype(jnp.float32)
+                      * ratio[:, None, None, None])
+    pages = jnp.clip(pages, -127, 127).astype(jnp.int8)
+    q = q.at[page_idx].set(pages)
+    qrows = jnp.clip(jnp.round(rows / s_new[page_idx][:, None, None]),
+                     -127, 127).astype(jnp.int8)
+    return {"q": q.at[page_idx, offset].set(qrows), "scale": s_new}
+
+
+def paged_store_chunk(pool, page_table, positions, rows):
+    """Write a contiguous chunk of rows for ONE slot — the prefill scatter.
+
+    ``positions`` are the rows' absolute positions; their pages are
+    ``page_table[pos // page_size]``.  Same quantization discipline as
+    :func:`paged_store_rows`; the static page-window covers the chunk's
+    worst-case page span, and window entries past the chunk's last page
+    are redirected to the scratch page (page 0) so no live page is ever
+    gather/scattered without rows."""
+    pos = positions.astype(jnp.int32)
+    if not isinstance(pool, dict):
+        page_size = pool.shape[1]
+        return pool.at[page_table[pos // page_size], pos % page_size].set(
+            rows.astype(pool.dtype))
+    q, scale = pool["q"], pool["scale"]
+    page_size = q.shape[1]
+    max_pages = page_table.shape[0]
+    rows = rows.astype(jnp.float32)                       # (T, KV, hd)
+    T = rows.shape[0]
+    n_w = T // page_size + 2                              # page-window bound
+    first = pos[0] // page_size
+    window = first + jnp.arange(n_w)                      # logical pages
+    touched = window <= pos[T - 1] // page_size
+    pids = jnp.where(touched,
+                     page_table[jnp.minimum(window, max_pages - 1)], 0)
+    local = pos // page_size - first                      # (T,) in-window
+    offs = pos % page_size
+    row_amax = jnp.max(jnp.abs(rows), axis=(1, 2))        # (T,)
+    page_amax = jnp.zeros((n_w,), jnp.float32).at[local].max(row_amax)
+    s_old = scale[pids]
+    s_new = jnp.maximum(s_old, page_amax / 127.0)
+    s_new = jnp.where(pids == 0, KV_SCRATCH_SCALE, s_new)
+    pages = q[pids].astype(jnp.float32)                   # (n_w, ps, KV, hd)
+    pages = jnp.round(pages * (s_old / s_new)[:, None, None, None])
+    pages = pages.at[local, offs].set(
+        jnp.round(rows / s_new[local][:, None, None]))
+    pages = jnp.clip(pages, -127, 127).astype(jnp.int8)
+    return {"q": q.at[pids].set(pages),
+            "scale": scale.at[pids].set(s_new)}
 
 
 def gqa_decode_paged(p, cfg: ModelConfig, x, k_pool_l, v_pool_l, page_table,
@@ -393,7 +515,9 @@ def gqa_decode_paged(p, cfg: ModelConfig, x, k_pool_l, v_pool_l, page_table,
 
     Every slot's new K/V lands in a page that slot owns exclusively (the
     runtime never hands a shared prefix page out as a write target), so
-    the scatter below cannot collide across slots.  Returns
+    the scatter below cannot collide across slots.  int8 pools
+    (``{"q","scale"}`` dicts — see :func:`paged_pools_init`) quantize the
+    write and dequantize inside the attend.  Returns
     ``(out (B,1,D), k_pool_l, v_pool_l)``.
     """
     from repro.kernels.paged_attention import paged_attention_pallas
@@ -402,19 +526,21 @@ def gqa_decode_paged(p, cfg: ModelConfig, x, k_pool_l, v_pool_l, page_table,
     B, T, _ = x.shape
     assert T == 1
     q, k, v = _qkv(p, cfg, x, positions[:, None])
-    page_size = k_pool_l.shape[1]
+    quantized = isinstance(k_pool_l, dict)
+    page_size = (k_pool_l["q"] if quantized else k_pool_l).shape[1]
     pos = positions.astype(jnp.int32)
     page_idx = page_table[jnp.arange(B), pos // page_size]  # (B,)
     offset = pos % page_size
-    k_pool_l = k_pool_l.at[page_idx, offset].set(
-        k[:, 0].astype(k_pool_l.dtype)
-    )
-    v_pool_l = v_pool_l.at[page_idx, offset].set(
-        v[:, 0].astype(v_pool_l.dtype)
-    )
+    k_pool_l = paged_store_rows(k_pool_l, page_idx, offset, k[:, 0])
+    v_pool_l = paged_store_rows(v_pool_l, page_idx, offset, v[:, 0])
     lengths = pos + 1  # context = everything written so far incl. this token
     attend = paged_attention_pallas if use_pallas else paged_attention_ref
-    out = attend(q[:, 0], k_pool_l, v_pool_l, page_table, lengths)
+    if quantized:
+        out = attend(q[:, 0], k_pool_l["q"], v_pool_l["q"], page_table,
+                     lengths, k_scale=k_pool_l["scale"],
+                     v_scale=v_pool_l["scale"])
+    else:
+        out = attend(q[:, 0], k_pool_l, v_pool_l, page_table, lengths)
     return out.reshape(B, 1, -1) @ p["wo"], k_pool_l, v_pool_l
 
 
@@ -441,14 +567,20 @@ def gqa_prefill_paged(p, cfg: ModelConfig, x, k_pool_l, v_pool_l, page_table,
     B, T, _ = x.shape
     assert B == 1
     q, k, v = _qkv(p, cfg, x, positions)
-    page_size = k_pool_l.shape[1]
     pos = positions.astype(jnp.int32)
-    page_idx = page_table[pos // page_size]  # (T,) — in-chunk positions are
-    offset = pos % page_size                 # distinct, so no scatter dups
-    k_pool_l = k_pool_l.at[page_idx, offset].set(k[0].astype(k_pool_l.dtype))
-    v_pool_l = v_pool_l.at[page_idx, offset].set(v[0].astype(v_pool_l.dtype))
-    kc = k_pool_l[page_table].reshape(1, -1, cfg.num_kv_heads, k.shape[-1])
-    vc = v_pool_l[page_table].reshape(1, -1, cfg.num_kv_heads, v.shape[-1])
+    # in-chunk positions are distinct, so the store never scatter-dups
+    k_pool_l = paged_store_chunk(k_pool_l, page_table, pos, k[0])
+    v_pool_l = paged_store_chunk(v_pool_l, page_table, pos, v[0])
+    if isinstance(k_pool_l, dict):
+        kc = kv_dequantize(k_pool_l["q"][page_table],
+                           k_pool_l["scale"][page_table][:, None, None, None])
+        vc = kv_dequantize(v_pool_l["q"][page_table],
+                           v_pool_l["scale"][page_table][:, None, None, None])
+        kc = kc.reshape(1, -1, cfg.num_kv_heads, k.shape[-1])
+        vc = vc.reshape(1, -1, cfg.num_kv_heads, v.shape[-1])
+    else:
+        kc = k_pool_l[page_table].reshape(1, -1, cfg.num_kv_heads, k.shape[-1])
+        vc = v_pool_l[page_table].reshape(1, -1, cfg.num_kv_heads, v.shape[-1])
     ctx = kc.shape[1]
     mask = jnp.arange(ctx)[None, :] <= pos[:, None]  # (T, ctx)
     out = sdpa(q, kc, vc, mask, cfg.num_kv_heads)

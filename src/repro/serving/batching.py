@@ -81,13 +81,18 @@ from repro.core.compat import donate_argnums
 from repro.core import averaging
 from repro.models import layers as L
 from repro.models import transformer as M
-from repro.serving.engine import MODES, serving_params
+from repro.serving.engine import MODES, averaged_params, serving_params
 
 PyTree = Any
 
 #: pool page 0 is never allocated: inactive slots' page tables point here,
 #: so their (masked, garbage) writes can't corrupt live pages.
 SCRATCH_PAGE = 0
+
+#: bucket edges for the per-step speculative rollback histogram (tokens
+#: drafted but rejected across the in-flight set; draft_k is small, so
+#: small-integer buckets resolve the whole range)
+SPEC_ROLLBACK_EDGES = (0.5, 1.5, 2.5, 4.5, 8.5, 16.5, 32.5)
 
 
 # ---------------------------------------------------------------------------
@@ -389,7 +394,8 @@ def _build_admit(cfg: ModelConfig, ensemble: bool, S: int, n_pages: int,
     return jax.jit(program, donate_argnums=donate_argnums((1, 2)))
 
 
-def _build_chunk(cfg: ModelConfig, ensemble: bool, greedy: bool):
+def _build_chunk(cfg: ModelConfig, ensemble: bool, greedy: bool,
+                 spec: bool = False):
     """One prompt chunk through ``M.prefill_paged``: compiled once per
     chunk LENGTH — the offset ``pos0``, the page table, and the sampling
     key are all traced, so one program serves every slot, every chunk
@@ -397,10 +403,18 @@ def _build_chunk(cfg: ModelConfig, ensemble: bool, greedy: bool):
 
     The returned ``token0`` is the first sampled token; the host uses it
     only when the chunk completes the prompt (intermediate chunks' last
-    rows are mid-prompt positions)."""
+    rows are mid-prompt positions).
 
-    def program(params, k_pool, v_pool, tokens, pos0, table, key,
-                temperature):
+    ``spec`` servers run the chunk through the DRAFT model too (same
+    tokens, same table) so the draft pools hold the prompt's soup-side
+    K/V before the first speculative step; ``token0`` still comes from
+    the verify side.  Prefix pages stay sharable: a page's content in
+    BOTH pools is a pure function of (tokens, params), so a chain-hash
+    hit is valid for the draft pool exactly when it is for the verify
+    pool."""
+
+    def program(params, draft_params, k_pool, v_pool, dk_pool, dv_pool,
+                tokens, pos0, table, key, temperature):
         _PREFILL_TRACES[0] += 1
         obs.get().record_compile("cont_prefill_chunk",
                                  T=int(tokens.shape[-1]))
@@ -417,19 +431,25 @@ def _build_chunk(cfg: ModelConfig, ensemble: bool, greedy: bool):
                 params, cfg, tokens, pos0, {"k": k_pool, "v": v_pool}, table)
             k_pool, v_pool = pools["k"], pools["v"]
             last = lg[:, -1]
+        if spec:
+            _, dpools = M.prefill_paged(
+                draft_params, cfg, tokens, pos0,
+                {"k": dk_pool, "v": dv_pool}, table)
+            dk_pool, dv_pool = dpools["k"], dpools["v"]
         token0 = _sample_steps(last, key[None], jnp.zeros((1,), jnp.int32),
                                temperature, greedy)[0]
-        return k_pool, v_pool, token0
+        return k_pool, v_pool, dk_pool, dv_pool, token0
 
-    return jax.jit(program, donate_argnums=donate_argnums((1, 2)))
+    return jax.jit(program, donate_argnums=donate_argnums((2, 3, 4, 5)))
 
 
 def _chunk_program(cfg: ModelConfig, ensemble: bool, T: int, max_pages: int,
-                   page_size: int, num_pages: int, greedy: bool):
+                   page_size: int, num_pages: int, greedy: bool,
+                   kv_dtype: Optional[str] = None, spec: bool = False):
     key = ("cont_chunk", cfg, ensemble, T, max_pages, page_size, num_pages,
-           greedy)
+           greedy, kv_dtype, spec)
     if key not in _EXEC_CACHE:
-        _EXEC_CACHE[key] = _build_chunk(cfg, ensemble, greedy)
+        _EXEC_CACHE[key] = _build_chunk(cfg, ensemble, greedy, spec)
     return _EXEC_CACHE[key]
 
 
@@ -473,15 +493,47 @@ def _build_decode(cfg: ModelConfig, ensemble: bool, greedy: bool,
     return program
 
 
+def _build_spec_decode(cfg: ModelConfig, ensemble: bool, greedy: bool,
+                       use_pallas: bool, draft_k: int):
+    """The speculative decode step: draft ``k`` tokens with the soup, then
+    verify all of them in ONE batched ensemble step — emitting up to
+    ``k`` tokens per call, bitwise the plain path at fp32 KV.  Program
+    logic lives in ``serving.speculative``; this wrapper owns the trace
+    counter so the one-executable-per-(geometry, draft_k, kv_dtype)
+    contract is guarded by the same ``decode_trace_count``."""
+    from repro.serving import speculative
+
+    inner = speculative.build_speculative_decode(
+        cfg, ensemble, greedy, use_pallas, draft_k)
+
+    def program(*args):
+        _DECODE_TRACES[0] += 1
+        obs.get().record_compile("cont_spec_decode", draft_k=draft_k)
+        return inner(*args)
+
+    return program
+
+
 def _programs(cfg: ModelConfig, ensemble: bool, geometry: Tuple,
-              greedy: bool, use_pallas: bool):
-    """(admit-by-S factory, decode) pair from the module executable cache."""
-    key = ("continuous", cfg, ensemble, geometry, greedy, use_pallas)
+              greedy: bool, use_pallas: bool,
+              kv_dtype: Optional[str] = None,
+              draft_k: Optional[int] = None):
+    """The decode program from the module executable cache — speculative
+    when ``draft_k`` is set (``None`` = plain one-token decode)."""
+    key = ("continuous", cfg, ensemble, geometry, greedy, use_pallas,
+           kv_dtype, draft_k)
     if key not in _EXEC_CACHE:
-        _EXEC_CACHE[key] = jax.jit(
-            _build_decode(cfg, ensemble, greedy, use_pallas),
-            donate_argnums=donate_argnums((1, 2)),
-        )
+        if draft_k is None:
+            _EXEC_CACHE[key] = jax.jit(
+                _build_decode(cfg, ensemble, greedy, use_pallas),
+                donate_argnums=donate_argnums((1, 2)),
+            )
+        else:
+            _EXEC_CACHE[key] = jax.jit(
+                _build_spec_decode(cfg, ensemble, greedy, use_pallas,
+                                   draft_k),
+                donate_argnums=donate_argnums((2, 3, 4, 5)),
+            )
     return _EXEC_CACHE[key]
 
 
@@ -526,6 +578,18 @@ class ContinuousServer:
         a shared system prompt above all — skip their prefill compute on
         every later request.  Off by default: ``run()``-style one-shot
         streams expect a drained pool to be empty.
+    speculative / draft_k : draft ``draft_k`` tokens per decode call with
+        the population soup and verify them in one batched ensemble step
+        (``serving.speculative``) — up to ``draft_k`` tokens emitted per
+        call, bitwise the plain path at fp32 KV.  Requires the
+        suffix-prefill path (the draft pools are prefilled by the same
+        chunk programs) and a dense config.  In ``soup``/``member`` mode
+        the model drafts for itself (accept rate 1.0 under greedy — the
+        mechanics without the population speed-up).
+    kv_dtype : ``None`` stores KV pages in the param dtype (the bitwise
+        path); ``"int8"`` quantizes every pool page symmetrically with a
+        per-(layer, page) float32 scale (``models.layers``), halving pool
+        HBM; decode then matches fp32 to a pinned tolerance, not bitwise.
     """
 
     def __init__(self, params: PyTree, cfg: ModelConfig, *,
@@ -535,7 +599,9 @@ class ContinuousServer:
                  max_pages_per_slot: Optional[int] = None,
                  use_pallas: Optional[bool] = None,
                  prefill_chunk: Optional[int] = None,
-                 retain_pages: bool = False):
+                 retain_pages: bool = False,
+                 speculative: bool = False, draft_k: int = 4,
+                 kv_dtype: Optional[str] = None):
         if mode not in MODES:
             raise ValueError(
                 f"unknown serving mode {mode!r}; expected one of {MODES}")
@@ -547,6 +613,9 @@ class ContinuousServer:
                              "num_pages >= 2 (page 0 is scratch)")
         if prefill_chunk is not None and prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1 (or None)")
+        if kv_dtype not in L.KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype={kv_dtype!r}; expected one of {L.KV_DTYPES}")
         self.cfg = cfg
         self.params = params
         self.ensemble = mode == "ensemble"
@@ -565,15 +634,45 @@ class ContinuousServer:
         # otherwise admissions fall back to the whole-prompt program with
         # write-mask dedup (no chunking, prefix pages shared but recomputed)
         self.suffix_prefill = M.paged_prefill_supported(cfg) is None
+        self.kv_dtype = kv_dtype
+        if kv_dtype is not None and not self.suffix_prefill:
+            # the legacy whole-prompt admit writes raw rows straight into
+            # the pool arrays — it has no quantization path
+            raise NotImplementedError(
+                f"kv_dtype={kv_dtype!r} needs the suffix-prefill path, "
+                f"but {M.paged_prefill_supported(cfg)}")
+        self.speculative = bool(speculative)
+        self.draft_k = int(draft_k)
+        if self.speculative:
+            from repro.serving import speculative as spec_mod
+
+            if self.draft_k < 1:
+                raise ValueError(f"draft_k must be >= 1, got {draft_k}")
+            reason = spec_mod.speculative_supported(cfg)
+            if reason is not None:
+                raise NotImplementedError(f"speculative decode: {reason}")
 
         n_members = None
         if self.ensemble:
             n_members = jax.tree_util.tree_leaves(params)[0].shape[0]
-        pools = L.paged_pools_init(cfg, num_pages, page_size, cfg.num_layers)
+        pools = L.paged_pools_init(cfg, num_pages, page_size, cfg.num_layers,
+                                   kv_dtype=kv_dtype)
         if self.ensemble:
             pools = jax.tree_util.tree_map(
                 lambda x: jnp.broadcast_to(x, (n_members,) + x.shape), pools)
         self._k_pool, self._v_pool = pools["k"], pools["v"]
+
+        # the draft side: the population soup drafts for the ensemble; a
+        # soup/member server drafts for itself.  Draft pools mirror the
+        # verify pools' geometry under the SAME page tables.
+        self._draft_params = None
+        self._dk_pool = self._dv_pool = None
+        if self.speculative:
+            self._draft_params = (averaged_params(params) if self.ensemble
+                                  else params)
+            dpools = L.paged_pools_init(cfg, num_pages, page_size,
+                                        cfg.num_layers, kv_dtype=kv_dtype)
+            self._dk_pool, self._dv_pool = dpools["k"], dpools["v"]
 
         self._pool = _PagePool(num_pages, retain=retain_pages)
         self._slots: List[Optional[_Slot]] = [None] * max_slots
@@ -584,12 +683,14 @@ class ContinuousServer:
         self._dummy_key = jax.random.split(jax.random.key(0), 1)[0]
         geometry = (max_slots, self.max_pages, page_size, num_pages)
         self._decode = _programs(cfg, self.ensemble, geometry, self.greedy,
-                                 self.use_pallas)
+                                 self.use_pallas, kv_dtype,
+                                 self.draft_k if self.speculative else None)
         self.stats = {"admitted": 0, "retired": 0, "cancelled": 0,
                       "decode_steps": 0, "pages_allocated": 0,
                       "pages_shared": 0, "peak_pages_in_use": 0,
                       "prefill_tokens": 0, "prefix_tokens_reused": 0,
-                      "lru_hits": 0, "lru_evictions": 0}
+                      "lru_hits": 0, "lru_evictions": 0,
+                      "spec_drafted": 0, "spec_accepted": 0}
 
     # -- construction from a trained population -------------------------
 
@@ -760,9 +861,12 @@ class ContinuousServer:
         table = np.full((self.max_pages,), SCRATCH_PAGE, np.int32)
         table[:len(pf.pages)] = pf.pages
         program = _chunk_program(self.cfg, self.ensemble, T, self.max_pages,
-                                 self.page_size, self.num_pages, self.greedy)
-        self._k_pool, self._v_pool, token0 = program(
-            self.params, self._k_pool, self._v_pool, jnp.asarray(chunk),
+                                 self.page_size, self.num_pages, self.greedy,
+                                 self.kv_dtype, self.speculative)
+        (self._k_pool, self._v_pool, self._dk_pool, self._dv_pool,
+         token0) = program(
+            self.params, self._draft_params, self._k_pool, self._v_pool,
+            self._dk_pool, self._dv_pool, jnp.asarray(chunk),
             jnp.int32(pf.pos), jnp.asarray(table), pf.key,
             jnp.float32(max(self.temperature, 1e-6)),
         )
@@ -895,13 +999,26 @@ class ContinuousServer:
                 break  # head-of-line blocks until pages free up
             self._queue.popleft()
 
-    def _grow(self, slot: _Slot) -> None:
-        """Lazy page growth: allocate the write page just before it is
-        needed.  Cannot fail — admission reserved the worst case."""
-        need_pages = slot.write_pos // self.page_size + 1
+    def _grow(self, slot: _Slot, extra: int = 0) -> None:
+        """Lazy page growth: allocate the write page(s) just before they
+        are needed (``extra`` covers a speculative step's lookahead —
+        bounded by the budget, so it never exceeds the admission-time
+        worst case).  Cannot fail — admission reserved that worst case."""
+        need_pages = (slot.write_pos + extra) // self.page_size + 1
         while len(slot.pages) < need_pages:
             slot.pages.append(self._pool.alloc())
             self.stats["pages_allocated"] += 1
+        self._sync_pool_stats()
+
+    def _shrink(self, slot: _Slot) -> None:
+        """Roll back a speculative step's page-table cursor: release the
+        trailing pages past the (possibly rolled-back) write position.
+        Trailing decode pages are never chain-hash registered, so release
+        really frees them — the pool's three-state partition (free /
+        retained / refcounted) survives every rollback."""
+        keep = slot.write_pos // self.page_size + 1
+        while len(slot.pages) > keep:
+            self._pool.release(slot.pages.pop())
         self._sync_pool_stats()
 
     def _retire(self, slot: _Slot) -> None:
@@ -931,12 +1048,16 @@ class ContinuousServer:
         budgets = np.full((B,), np.iinfo(np.int32).max, np.int32)
         active = np.zeros((B,), bool)
         tables = np.full((B, Pmax), SCRATCH_PAGE, np.int32)
+        n_spec = np.zeros((B,), np.int32)  # proposals per slot this call
         keys = []
         for i, slot in enumerate(self._slots):
             if slot is None:
                 keys.append(self._dummy_key)
                 continue
-            self._grow(slot)
+            if self.speculative:
+                n_spec[i] = min(self.draft_k, slot.max_new - len(slot.out))
+                n_spec[i] = max(n_spec[i], 1)
+            self._grow(slot, extra=max(int(n_spec[i]) - 1, 0))
             tokens[i] = slot.out[-1]
             positions[i] = slot.write_pos
             steps[i] = len(slot.out)
@@ -947,13 +1068,28 @@ class ContinuousServer:
 
         tel = obs.get()
         with tel.span("serve.decode_step", slots=self.active_slots):
-            sampled, done, self._k_pool, self._v_pool = self._decode(
-                self.params, self._k_pool, self._v_pool,
-                jnp.asarray(tokens), jnp.asarray(positions),
-                jnp.asarray(steps), jnp.asarray(budgets),
-                jnp.asarray(active), jnp.asarray(tables),
-                jnp.stack(keys), jnp.float32(max(self.temperature, 1e-6)),
-            )
+            if self.speculative:
+                (sampled, counts, done, self._k_pool, self._v_pool,
+                 self._dk_pool, self._dv_pool) = self._decode(
+                    self.params, self._draft_params,
+                    self._k_pool, self._v_pool, self._dk_pool, self._dv_pool,
+                    jnp.asarray(tokens), jnp.asarray(positions),
+                    jnp.asarray(steps), jnp.asarray(budgets),
+                    jnp.asarray(active), jnp.asarray(tables),
+                    jnp.stack(keys),
+                    jnp.float32(max(self.temperature, 1e-6)),
+                )
+                counts = np.asarray(counts)
+            else:
+                sampled, done, self._k_pool, self._v_pool = self._decode(
+                    self.params, self._k_pool, self._v_pool,
+                    jnp.asarray(tokens), jnp.asarray(positions),
+                    jnp.asarray(steps), jnp.asarray(budgets),
+                    jnp.asarray(active), jnp.asarray(tables),
+                    jnp.stack(keys),
+                    jnp.float32(max(self.temperature, 1e-6)),
+                )
+                counts = None
         sampled = np.asarray(sampled)
         done = np.asarray(done)
         self.stats["decode_steps"] += 1
@@ -963,13 +1099,37 @@ class ContinuousServer:
                 "serve.slot_occupancy", obs.RATIO_EDGES
             ).observe(self.active_slots / self.max_slots)
 
+        drafted = accepted = 0
         for i, slot in enumerate(self._slots):
             if slot is None:
                 continue
-            slot.out.append(int(sampled[i]))
+            if self.speculative:
+                m = int(counts[i])
+                slot.out.extend(int(t) for t in sampled[i, :m])
+                drafted += int(n_spec[i]) - 1
+                accepted += m - 1
+                if not done[i]:
+                    # roll the page-table cursor back over rejected tokens
+                    self._shrink(slot)
+            else:
+                slot.out.append(int(sampled[i]))
             if done[i]:
                 self._retire(slot)
                 self._slots[i] = None
+        if self.speculative:
+            self.stats["spec_drafted"] += drafted
+            self.stats["spec_accepted"] += accepted
+            if tel.enabled:
+                reg = tel.registry
+                reg.counter("serve.spec_drafted").inc(drafted)
+                reg.counter("serve.spec_accepted").inc(accepted)
+                if drafted:
+                    reg.histogram(
+                        "serve.spec_accept_ratio", obs.RATIO_EDGES
+                    ).observe(accepted / drafted)
+                reg.histogram(
+                    "serve.spec_rollback", SPEC_ROLLBACK_EDGES
+                ).observe(drafted - accepted)
         return [u for u in self._results if u not in before]
 
     def run(self, requests: Optional[List[Request]] = None

@@ -59,6 +59,10 @@ from repro.serving.batching import ContinuousServer, Request, Result
 __all__ = ["QueueFull", "RequestMetrics", "RequestDriver",
            "poisson_arrivals", "summarize"]
 
+#: bucket edges for the speculative burst-size histogram (tokens emitted
+#: to one stream by one tick; bounded by the server's draft_k)
+SPEC_BURST_EDGES = (1.5, 2.5, 3.5, 4.5, 6.5, 8.5, 16.5)
+
 
 class QueueFull(RuntimeError):
     """Raised by ``submit`` when the queued-token budget is exhausted —
@@ -286,6 +290,7 @@ class RequestDriver:
     def _emit(self, uid: Any, generated: Sequence[int], now: float) -> None:
         stream = self._streams[uid]
         rec = self.metrics[uid]
+        burst = 0
         for tok in list(generated)[stream.emitted:]:
             if rec.first_token is None:
                 rec.first_token = now
@@ -293,6 +298,16 @@ class RequestDriver:
             if stream.on_token is not None:
                 stream.on_token(uid, int(tok))
             stream.emitted += 1
+            burst += 1
+        # speculative servers emit multi-token bursts (the accepted draft
+        # prefix lands at once); the burst size IS the per-stream view of
+        # the accept rate, so track its distribution
+        if burst and getattr(self.server, "speculative", False):
+            tel = obs.get()
+            if tel.enabled:
+                tel.registry.histogram(
+                    "serve.spec_burst", SPEC_BURST_EDGES
+                ).observe(burst)
 
     def _finish(self, uid: Any, result: Result, now: float) -> None:
         stream = self._streams.pop(uid)

@@ -19,7 +19,13 @@ Contracts under test:
     tokens as the jnp gather oracle path;
   * unsupported cache layouts (MLA, SSM state, sliding window, modality
     prefixes) are rejected loudly, and sampling without a per-request key
-    is rejected like in ``engine.generate``.
+    is rejected like in ``engine.generate``;
+  * the decode executable is keyed by (geometry, kv_dtype, draft_k):
+    every distinct speculative draft length or KV dtype costs exactly
+    one trace, and same-key servers share one executable;
+  * int8 paged KV tracks the fp32 pools within the pinned logit
+    tolerance (program-level), and on the pinned mixed stream emits
+    fp32-identical tokens — speculative + int8 compose.
 """
 
 import jax
@@ -374,6 +380,107 @@ def test_pallas_kernel_path_matches_reference_tokens():
     out = server.run(reqs)
     for r in reqs:
         np.testing.assert_array_equal(_reference(params, r), out[r.uid].tokens)
+
+
+# ---------------------------------------------------------------------------
+# speculative decode + quantized KV: executable-cache keys and tolerance
+# ---------------------------------------------------------------------------
+
+
+def test_one_decode_program_per_geometry_draft_k_kv_dtype():
+    """The decode executable is keyed by (geometry, ..., kv_dtype,
+    draft_k): same-key servers share one trace; changing draft_k or
+    kv_dtype adds EXACTLY one."""
+    params = _params()
+
+    def serve(**kw):
+        server = batching.ContinuousServer(params, CFG, page_size=4,
+                                           max_slots=3, num_pages=32, **kw)
+        server.run(_mixed_requests(seed=21))
+
+    serve(speculative=True, draft_k=3)
+    assert batching.decode_trace_count() == 1
+    serve(speculative=True, draft_k=3)             # same key: pure reuse
+    assert batching.decode_trace_count() == 1
+    serve(speculative=True, draft_k=5)             # new draft_k: one more
+    assert batching.decode_trace_count() == 2
+    serve()                                        # plain (draft_k=None)
+    assert batching.decode_trace_count() == 3
+    serve(kv_dtype="int8")                         # plain int8
+    assert batching.decode_trace_count() == 4
+    serve(speculative=True, draft_k=3, kv_dtype="int8")
+    assert batching.decode_trace_count() == 5, (
+        "every distinct (draft_k, kv_dtype) must cost exactly one trace")
+
+
+def test_int8_decode_logits_track_fp32_within_tolerance():
+    """The quantized-KV numeric contract at program level: prefill a
+    prompt into fp32 and int8 pools, run one paged decode step against
+    each, and the logits agree within the pinned tolerance (per-element
+    KV error is at most half a quantization step)."""
+    from repro.models import layers as L
+
+    params = _params()
+    rng = np.random.default_rng(30)
+    prompt = jnp.asarray(rng.integers(0, CFG.vocab_size, (10,)), jnp.int32)
+    table = jnp.arange(1, 6, dtype=jnp.int32)          # pages 1..5
+    outs = {}
+    for kv_dtype in (None, "int8"):
+        pools = L.paged_pools_init(CFG, num_pages=8, page_size=4,
+                                   num_layers=CFG.num_layers,
+                                   kv_dtype=kv_dtype)
+        lg, pools = M.prefill_paged(params, CFG, prompt, 0, pools, table)
+        step_logits, _ = M.decode_step_paged(
+            params, CFG, jnp.argmax(lg[0, -1])[None].astype(jnp.int32),
+            jnp.array([10], jnp.int32), pools, table[None])
+        outs[kv_dtype] = (np.asarray(lg), np.asarray(step_logits))
+    for a, b in zip(outs[None], outs["int8"]):
+        np.testing.assert_allclose(a, b, rtol=0.0, atol=0.1)
+    assert np.argmax(outs[None][1]) == np.argmax(outs["int8"][1])
+
+
+def test_int8_kv_stream_matches_fp32_tokens_on_pinned_stream():
+    """End-to-end int8 serving on the pinned mixed stream: this tiny
+    config's logit margins dominate the bounded KV quantization error, so
+    the emitted tokens match fp32 exactly (a logit-level tolerance is the
+    contract — the program-level test above — but pinning the stream
+    catches any silent blow-up in quant error), and the runtime
+    invariants (one trace, drained pool) hold untouched."""
+    params = _params()
+    fp = batching.ContinuousServer(params, CFG, page_size=4, max_slots=3,
+                                   num_pages=32)
+    out_fp = fp.run(_mixed_requests(seed=0))
+    batching.reset_trace_counts()
+    q = batching.ContinuousServer(params, CFG, page_size=4, max_slots=3,
+                                  num_pages=32, kv_dtype="int8")
+    out_q = q.run(_mixed_requests(seed=0))
+    assert set(out_q) == set(out_fp)
+    for uid in out_fp:
+        np.testing.assert_array_equal(out_fp[uid].tokens, out_q[uid].tokens)
+    assert batching.decode_trace_count() == 1
+    assert q._pool.used_count == 0
+    assert q.stats["retired"] == len(MIXED)
+
+
+def test_speculative_int8_composes_and_stays_within_stream_tolerance():
+    """Speculative + int8 together: the bitwise claim relaxes (a page's
+    scale couples every row written to it), but the stream still serves
+    completely, rolls back cleanly, and matches the plain int8 server on
+    this pinned stream."""
+    params = _params()
+    plain = batching.ContinuousServer(params, CFG, page_size=4, max_slots=3,
+                                      num_pages=32, kv_dtype="int8")
+    out_plain = plain.run(_mixed_requests(seed=0))
+    spec = batching.ContinuousServer(params, CFG, page_size=4, max_slots=3,
+                                     num_pages=32, kv_dtype="int8",
+                                     speculative=True, draft_k=4)
+    out_spec = spec.run(_mixed_requests(seed=0))
+    assert set(out_spec) == set(out_plain)
+    for uid in out_plain:
+        np.testing.assert_array_equal(out_plain[uid].tokens,
+                                      out_spec[uid].tokens)
+    assert spec._pool.used_count == 0
+    assert spec.stats["spec_drafted"] >= spec.stats["spec_accepted"] >= 0
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ from repro.core import shuffle as shf
 from repro.core.consensus import sq_distance_to_consensus
 from repro.core.compat import resolve_interpret
 from repro.kernels import ops, ref
+from repro.models import layers as L
 
 KEY = jax.random.key(0)
 
@@ -238,6 +239,138 @@ def test_paged_attention_length_edges():
     expect = ref.paged_attention_ref(q, kp, vp, pt, lv)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=2e-5, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# quantized paged attention (int8 pools + symmetric per-page scales)
+# ---------------------------------------------------------------------------
+
+
+def _quantized_pool(key, P, ps, KV, hd):
+    """(fp32 pool, int8 pool, per-page scale) with page-exact scales."""
+    pool = jax.random.normal(key, (P, ps, KV, hd))
+    scale = jnp.maximum(jnp.max(jnp.abs(pool), axis=(1, 2, 3)) / 127.0,
+                        L.KV_SCALE_FLOOR)
+    return pool, L.kv_quantize(pool, scale[:, None, None, None]), scale
+
+
+def _fresh_int8_pool(P, ps, KV, hd):
+    """A per-layer int8 pool as paged_pools_init lays one out: zero bits,
+    floor scales, page 0 pinned to the scratch scale."""
+    scale = jnp.full((P,), L.KV_SCALE_FLOOR, jnp.float32)
+    scale = scale.at[0].set(L.KV_SCRATCH_SCALE)
+    return {"q": jnp.zeros((P, ps, KV, hd), jnp.int8), "scale": scale}
+
+
+@pytest.mark.parametrize("B,H,KV,hd,P,ps,mp", [
+    (3, 4, 2, 16, 8, 4, 3),    # GQA groups of 2
+    (2, 8, 8, 32, 16, 8, 4),   # MHA (g=1)
+])
+def test_paged_attention_quantized_kernel_matches_ref(B, H, KV, hd, P, ps, mp):
+    """Pallas (interpret) and the jnp oracle must agree on the SAME
+    quantized pools — the dequant happens inside both attends."""
+    ks = [jax.random.fold_in(KEY, 40 + i) for i in range(5)]
+    q = jax.random.normal(ks[0], (B, H, hd))
+    _, qk, k_scale = _quantized_pool(ks[1], P, ps, KV, hd)
+    _, qv, v_scale = _quantized_pool(ks[2], P, ps, KV, hd)
+    pt = jax.random.randint(ks[3], (B, mp), 0, P)
+    lengths = jax.random.randint(ks[4], (B,), 1, mp * ps + 1)
+    out = ops.paged_attention(q, qk, qv, pt, lengths,
+                              k_scale=k_scale, v_scale=v_scale)
+    expect = ref.paged_attention_ref(q, qk, qv, pt, lengths,
+                                     k_scale=k_scale, v_scale=v_scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_paged_attention_quantized_tracks_fp32_within_tolerance():
+    """int8 KV vs the fp32 pools it quantized: the pinned serving
+    tolerance (per-element quant error is <= scale/2 ~ amax/254, and the
+    softmax-weighted attend keeps the output inside a few steps)."""
+    B, H, KV, hd, P, ps, mp = 3, 4, 2, 16, 8, 4, 3
+    ks = [jax.random.fold_in(KEY, 50 + i) for i in range(5)]
+    q = jax.random.normal(ks[0], (B, H, hd))
+    kp, qk, k_scale = _quantized_pool(ks[1], P, ps, KV, hd)
+    vp, qv, v_scale = _quantized_pool(ks[2], P, ps, KV, hd)
+    pt = jax.random.randint(ks[3], (B, mp), 0, P)
+    lengths = jax.random.randint(ks[4], (B,), 1, mp * ps + 1)
+    exact = ref.paged_attention_ref(q, kp, vp, pt, lengths)
+    quant = ops.paged_attention(q, qk, qv, pt, lengths,
+                                k_scale=k_scale, v_scale=v_scale)
+    np.testing.assert_allclose(np.asarray(quant), np.asarray(exact),
+                               rtol=0.0, atol=5e-2)
+
+
+def test_paged_attention_rejects_half_specified_scales():
+    B, H, KV, hd, P, ps, mp = 1, 2, 1, 8, 4, 2, 2
+    q = jnp.zeros((B, H, hd))
+    pool = jnp.zeros((P, ps, KV, hd))
+    pt = jnp.zeros((B, mp), jnp.int32)
+    lengths = jnp.ones((B,), jnp.int32)
+    with pytest.raises(ValueError, match="scale"):
+        ops.paged_attention(q, pool, pool, pt, lengths,
+                            k_scale=jnp.ones((P,)))
+
+
+def test_kv_store_rows_round_trip_error_bound():
+    """Decode-step scatter into an int8 pool, read back dequantized: the
+    absolute error is bounded by half a quantization step of the final
+    page scale."""
+    P, ps, KV, hd, B = 6, 4, 2, 8, 5
+    pool = _fresh_int8_pool(P, ps, KV, hd)
+    rows = jax.random.normal(jax.random.fold_in(KEY, 60), (B, KV, hd)) * 3.0
+    page_idx = jnp.array([1, 2, 3, 4, 5], jnp.int32)
+    offset = jnp.array([0, 1, 2, 3, 0], jnp.int32)
+    pool = L.paged_store_rows(pool, page_idx, offset, rows)
+    got = L.kv_dequantize(pool["q"], pool["scale"][:, None, None, None])
+    err = jnp.abs(got[page_idx, offset] - rows)
+    bound = 0.5 * pool["scale"][page_idx][:, None, None] + 1e-6
+    assert bool(jnp.all(err <= bound)), (
+        f"round-trip error {float(err.max()):.4f} exceeds half a "
+        f"quantization step {float(bound.max()):.4f}")
+
+
+def test_kv_store_rows_duplicate_pages_keep_every_row():
+    """The speculative verify step scatters several rows of one slot —
+    often all into ONE page — in a single call; a gather-modify-scatter
+    implementation would silently drop all but one duplicate."""
+    P, ps, KV, hd = 4, 4, 2, 8
+    pool = _fresh_int8_pool(P, ps, KV, hd)
+    rows = jax.random.normal(jax.random.fold_in(KEY, 61), (4, KV, hd))
+    page_idx = jnp.array([2, 2, 2, 2], jnp.int32)     # one page, 4 rows
+    offset = jnp.arange(4, dtype=jnp.int32)
+    pool = L.paged_store_rows(pool, page_idx, offset, rows)
+    got = L.kv_dequantize(pool["q"], pool["scale"][:, None, None, None])
+    err = jnp.abs(got[2, :4] - rows)
+    bound = 0.5 * pool["scale"][2] + 1e-6
+    assert bool(jnp.all(err <= bound)), (
+        f"duplicate-page scatter dropped rows: max err {float(err.max()):.4f}")
+
+
+def test_kv_scratch_page_scale_never_adapts():
+    """Page 0 is the runtime's scratch target for masked/inactive rows;
+    its scale must stay pinned at KV_SCRATCH_SCALE however large the
+    garbage written to it, while live pages adapt monotonically."""
+    P, ps, KV, hd = 4, 4, 2, 8
+    pool = _fresh_int8_pool(P, ps, KV, hd)
+    huge = jnp.full((2, KV, hd), 1e4, jnp.float32)
+    pool = L.paged_store_rows(pool, jnp.array([0, 1], jnp.int32),
+                              jnp.array([0, 0], jnp.int32), huge)
+    assert float(pool["scale"][0]) == L.KV_SCRATCH_SCALE
+    assert float(pool["scale"][1]) == pytest.approx(1e4 / 127.0)
+    # growing a page's scale keeps previously-written rows within THEIR
+    # original bound (rescale is monotone, error only shrinks relatively)
+    small = jnp.full((1, KV, hd), 0.5, jnp.float32)
+    pool = L.paged_store_rows(pool, jnp.array([2], jnp.int32),
+                              jnp.array([0], jnp.int32), small)
+    s_before = float(pool["scale"][2])
+    big = jnp.full((1, KV, hd), 40.0, jnp.float32)
+    pool = L.paged_store_rows(pool, jnp.array([2], jnp.int32),
+                              jnp.array([1], jnp.int32), big)
+    assert float(pool["scale"][2]) >= s_before
+    got = L.kv_dequantize(pool["q"], pool["scale"][:, None, None, None])
+    assert float(jnp.abs(got[2, 0] - 0.5).max()) <= \
+        0.5 * float(pool["scale"][2]) + 1e-6
 
 
 # ---------------------------------------------------------------------------

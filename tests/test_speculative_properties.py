@@ -1,0 +1,237 @@
+"""Property tests for population-powered speculative decoding.
+
+The contract under test (``serving/speculative.py``): at fp32 KV the
+speculative continuous server is **bitwise identical** to the plain
+(non-speculative) continuous server — token for token, for greedy AND
+temperature sampling, for every draft length ``k`` in ``[1, 8]``, over
+mixed-length streams whose staggered admissions put slots at different
+progress inside one verify step.  On top of parity:
+
+  * **zero-leak partition**: after a stream drains — through however
+    many speculative rollbacks (``_grow`` lookahead then ``_shrink``) —
+    free + LRU-parked + refcounted pages sum to the pool size and no
+    page is still referenced;
+  * **trace discipline**: one decode executable per (geometry, mode,
+    greedy, draft_k) — the module tracks every distinct combination it
+    has served and the cumulative trace counter must equal exactly that;
+  * **budget clamping**: ``draft_k`` larger than a request's remaining
+    budget never overruns ``max_new`` (``n_valid`` clamp).
+
+The hypothesis layer (dev-only dependency) explores the stream space;
+fixed-seed fallbacks below pin the same invariants on handcrafted worst
+cases so CI without hypothesis still exercises every branch.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as M
+from repro.serving import batching
+from repro.serving.driver import RequestDriver
+from repro.serving.speculative import MAX_DRAFT_K, speculative_supported
+
+CFG = ModelConfig(num_layers=2, d_model=32, num_heads=4, num_kv_heads=2,
+                  d_ff=64, vocab_size=50, dtype="float32")
+PARAMS = M.init_params(jax.random.key(0), CFG)
+# a genuinely diverse population: the soup's drafts DO get rejected, so
+# the rollback (_shrink) path runs on nearly every ensemble step
+POPN = jax.vmap(lambda k: M.init_params(k, CFG))(
+    jax.random.split(jax.random.key(1), 3))
+# ONE pool geometry for the whole module; max_slots < stream length so
+# admissions stagger and verify steps mix slots at different depths
+PAGE_SIZE, MAX_SLOTS, NUM_PAGES = 4, 3, 64
+
+#: every (ensemble, greedy, draft_k-or-None) combination served so far;
+#: the decode trace counter must equal its size after every stream
+_SEEN_PROGRAMS = set()
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _fresh_module_cache():
+    batching.clear_executable_cache()
+    batching.reset_trace_counts()
+    _SEEN_PROGRAMS.clear()
+    yield
+    batching.clear_executable_cache()
+
+
+def _make_stream(seed, n):
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, CFG.vocab_size,
+                            (int(rng.integers(1, 18)),)).astype(np.int32)
+               for _ in range(n)]
+    max_news = [int(rng.integers(1, 9)) for _ in range(n)]
+    return prompts, max_news
+
+
+def _serve(prompts, max_news, *, mode, temperature, speculative,
+           draft_k=4):
+    params = POPN if mode == "ensemble" else PARAMS
+    server = batching.ContinuousServer(
+        params, CFG, mode=mode, temperature=temperature,
+        page_size=PAGE_SIZE, max_slots=MAX_SLOTS, num_pages=NUM_PAGES,
+        speculative=speculative, draft_k=draft_k)
+    reqs = [batching.Request(uid, p, mn,
+                             key=jax.random.key(1000 + uid))
+            for uid, (p, mn) in enumerate(zip(prompts, max_news))]
+    out = server.run(reqs)
+    # jit traces on first CALL: a stream of max_new=1 requests retires
+    # every slot at admission and never runs the decode program at all
+    if server.stats["decode_steps"]:
+        _SEEN_PROGRAMS.add((mode == "ensemble", temperature <= 0.0,
+                            draft_k if speculative else None))
+    assert batching.decode_trace_count() == len(_SEEN_PROGRAMS), (
+        f"decode must compile once per (geometry, mode, greedy, draft_k): "
+        f"{batching.decode_trace_count()} traces for "
+        f"{len(_SEEN_PROGRAMS)} distinct programs")
+    return out, server
+
+
+def _check_parity_and_pool(prompts, max_news, *, mode, temperature,
+                           draft_k):
+    """The shared invariant harness: same stream through the plain and
+    the speculative server, bitwise compare, then audit the pool."""
+    plain, _ = _serve(prompts, max_news, mode=mode,
+                      temperature=temperature, speculative=False)
+    spec, server = _serve(prompts, max_news, mode=mode,
+                          temperature=temperature, speculative=True,
+                          draft_k=draft_k)
+    assert sorted(spec) == sorted(plain)
+    for uid in plain:
+        np.testing.assert_array_equal(
+            plain[uid].tokens, spec[uid].tokens,
+            err_msg=f"uid {uid} (mode={mode}, T={temperature}, "
+                    f"k={draft_k}): speculative decode diverged from the "
+                    f"non-speculative oracle")
+        # budget clamp: never a token past max_new, whatever draft_k
+        assert (len(spec[uid].tokens)
+                == len(prompts[uid]) + max_news[uid])
+
+    # zero-leak partition after every grow/shrink cycle: free + parked +
+    # refcounted pages account for the whole pool (page 0 is scratch)
+    pool = server._pool
+    assert not pool.refcount, f"leaked refcounts at drain: {pool.refcount}"
+    assert (pool.free_count + pool.retained_count + len(pool.refcount)
+            == NUM_PAGES - 1), "pool three-state invariant broken"
+    return server
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer (dev-only dependency; fixed-seed tests below cover CI)
+# ---------------------------------------------------------------------------
+
+# NOT pytest.importorskip: that would skip the WHOLE module, including
+# the fixed-seed fallback tests that must run on the base image
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    settings.register_profile(
+        "ci", settings(max_examples=8, deadline=None, derandomize=True))
+    if os.environ.get("HYPOTHESIS_PROFILE"):
+        settings.load_profile(os.environ["HYPOTHESIS_PROFILE"])
+
+    SETTINGS = dict(max_examples=10, deadline=None)
+
+    @st.composite
+    def spec_cases(draw):
+        n = draw(st.integers(1, 5))
+        seed = draw(st.integers(0, 2**31 - 1))
+        draft_k = draw(st.integers(1, MAX_DRAFT_K))
+        mode = draw(st.sampled_from(["soup", "ensemble"]))
+        temperature = draw(st.sampled_from([0.0, 0.8]))
+        return n, seed, draft_k, mode, temperature
+
+    @given(spec_cases())
+    @settings(**SETTINGS)
+    def test_random_streams_match_plain_decode_bitwise(case):
+        n, seed, draft_k, mode, temperature = case
+        prompts, max_news = _make_stream(seed, n)
+        _check_parity_and_pool(prompts, max_news, mode=mode,
+                               temperature=temperature, draft_k=draft_k)
+
+
+# ---------------------------------------------------------------------------
+# fixed-seed fallbacks: same harness, handcrafted worst cases, no
+# hypothesis needed (these DO run on the base CI image)
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_greedy_ensemble_stream_with_rollbacks():
+    """Diverse population + greedy: drafts get rejected, so _shrink runs
+    — and the stream must STILL be bitwise the plain ensemble's."""
+    prompts, max_news = _make_stream(200, 5)
+    server = _check_parity_and_pool(prompts, max_news, mode="ensemble",
+                                    temperature=0.0, draft_k=4)
+    st = server.stats
+    assert st["spec_drafted"] > 0
+    assert st["spec_accepted"] < st["spec_drafted"], (
+        "a diverse population must reject some drafts, or this test "
+        "isn't exercising the rollback path at all")
+
+
+def test_fixed_temperature_sampling_stays_bitwise():
+    """Sampled (T=0.8) decode is still deterministic per (key, step), so
+    speculation must reproduce it bit-for-bit too."""
+    prompts, max_news = _make_stream(201, 4)
+    _check_parity_and_pool(prompts, max_news, mode="soup",
+                           temperature=0.8, draft_k=3)
+
+
+def test_fixed_draft_k_edges_and_budget_clamp():
+    """k=1 (speculation degenerates to plain stepping) and k=8 against
+    tiny budgets (every call clamps far below the draft length)."""
+    prompts, _ = _make_stream(202, 4)
+    _check_parity_and_pool(prompts, [1, 2, 1, 3], mode="soup",
+                           temperature=0.0, draft_k=MAX_DRAFT_K)
+    prompts, max_news = _make_stream(203, 3)
+    _check_parity_and_pool(prompts, max_news, mode="ensemble",
+                           temperature=0.0, draft_k=1)
+
+
+def test_fixed_staggered_admissions_through_driver():
+    """Chunked-prefill driver admissions land mid-stream: slots inside
+    one verify step sit at different depths, some freshly admitted."""
+    prompts, max_news = _make_stream(204, 6)
+    reqs = [batching.Request(uid, p, mn)
+            for uid, (p, mn) in enumerate(zip(prompts, max_news))]
+
+    def drive(speculative):
+        server = batching.ContinuousServer(
+            POPN, CFG, mode="ensemble", page_size=PAGE_SIZE,
+            max_slots=MAX_SLOTS, num_pages=NUM_PAGES,
+            speculative=speculative, draft_k=4)
+        driver = RequestDriver(server, prefill_chunk=4)
+        for r in reqs:
+            driver.submit(batching.Request(r.uid, r.tokens, r.max_new))
+        return driver.drain(), server
+
+    plain, _ = drive(False)
+    spec, server = drive(True)
+    for uid in plain:
+        np.testing.assert_array_equal(plain[uid].tokens, spec[uid].tokens)
+    pool = server._pool
+    assert not pool.refcount
+    assert (pool.free_count + pool.retained_count + len(pool.refcount)
+            == NUM_PAGES - 1)
+
+
+def test_speculative_rejects_unsupported_configs():
+    moe_cfg = ModelConfig(num_layers=2, d_model=32, num_heads=4,
+                          num_kv_heads=2, d_ff=64, vocab_size=50,
+                          dtype="float32", moe=True, n_routed_experts=4,
+                          top_k=2)
+    assert speculative_supported(moe_cfg) is not None
+    with pytest.raises(NotImplementedError, match="[Ss]peculative"):
+        batching.ContinuousServer(
+            M.init_params(jax.random.key(0), moe_cfg), moe_cfg,
+            page_size=PAGE_SIZE, max_slots=MAX_SLOTS,
+            num_pages=NUM_PAGES, speculative=True)

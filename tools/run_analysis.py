@@ -56,7 +56,7 @@ DEFAULT_BASELINE = os.path.join("tools", "analysis_baseline.txt")
 # mirrors repro.analysis.matrix.ENTRIES without importing jax at
 # parser-build time; tests/test_analysis.py asserts they stay in sync
 MATRIX_ENTRIES = ("train_chunk", "pipelined_train", "scan_decode",
-                  "continuous_decode")
+                  "continuous_decode", "speculative_decode")
 
 
 def build_parser():
